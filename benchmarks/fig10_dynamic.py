@@ -1,0 +1,41 @@
+"""Fig. 10: Edgent under a dynamic (Belgium-LTE-like bus) bandwidth trace —
+BOCD state detection driving the configuration-map lookup, with the
+throughput and selections over time."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, alexnet_setup, set_slo
+from repro.core.partitioner import branch_latency
+from repro.data.bandwidth import belgium_lte_like, oboe_like_traces
+
+
+def run(emit):
+    s = alexnet_setup()
+    planner = s["planner"]
+    set_slo(planner, 1.0)
+    # offline: 428 Oboe-like states (paper Sec. V-C)
+    traces = oboe_like_traces(seed=0, num=428)
+    with Timer() as t_map:
+        planner.offline_dynamic([tr.tolist() for tr in traces])
+    emit("fig10_config_map_build", t_map.us,
+         f"states={len(planner.dynamic_opt.cmap)}")
+
+    lte = belgium_lte_like(seed=3, length=400, transport="bus", hi_mbps=10.0)
+    g, fe, fd = s["graph"], planner.f_edge, planner.f_device
+    thr, exits, parts = [], [], []
+    with Timer() as t_run:
+        for b in lte:
+            plan = planner.plan(b, dynamic=True)
+            lat = branch_latency(g, plan.exit_point, plan.partition, fe, fd, b)
+            thr.append(1.0 / lat)
+            exits.append(plan.exit_point)
+            parts.append(plan.partition)
+    emit("fig10_online_step", t_run.us / len(lte),
+         f"mean_thr_fps={np.mean(thr):.2f};transitions="
+         f"{planner.dynamic_opt.transitions}")
+    emit("fig10_exit_stability", 0.0,
+         f"modal_exit={int(np.bincount(exits).argmax())};"
+         f"exit_changes={int(np.sum(np.diff(exits) != 0))};"
+         f"part_changes={int(np.sum(np.diff(parts) != 0))}")
+    return {"throughput": thr, "exits": exits, "partitions": parts}

@@ -1,0 +1,39 @@
+"""Fig. 11: CDF of throughput and reward — static vs dynamic configurator
+under the dynamic bandwidth environment (paper: dynamic dominates)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import alexnet_setup, set_slo
+from repro.core.config_map import reward_fn
+from repro.core.partitioner import branch_latency
+from repro.data.bandwidth import belgium_lte_like, oboe_like_traces
+
+
+def run(emit):
+    s = alexnet_setup()
+    planner = s["planner"]
+    set_slo(planner, 1.0)
+    if planner.dynamic_opt is None:
+        traces = oboe_like_traces(seed=0, num=428)
+        planner.offline_dynamic([tr.tolist() for tr in traces])
+    g, fe, fd = s["graph"], planner.f_edge, planner.f_device
+    lte = belgium_lte_like(seed=7, length=400, transport="bus", hi_mbps=10.0)
+
+    rows = {"static": {"thr": [], "rew": []}, "dynamic": {"thr": [], "rew": []}}
+    for b in lte:
+        for mode, dyn in (("static", False), ("dynamic", True)):
+            p = planner.plan(b, dynamic=dyn)
+            lat = branch_latency(g, p.exit_point, p.partition, fe, fd, b)
+            rows[mode]["thr"].append(1.0 / lat)
+            rows[mode]["rew"].append(reward_fn(p.accuracy, lat, 1.0))
+    for mode in rows:
+        thr = np.asarray(rows[mode]["thr"])
+        rew = np.asarray(rows[mode]["rew"])
+        emit(f"fig11_{mode}_throughput", 0.0,
+             f"p50={np.percentile(thr, 50):.2f};p10={np.percentile(thr, 10):.2f}")
+        emit(f"fig11_{mode}_reward", 0.0,
+             f"p50={np.percentile(rew, 50):.2f};mean={rew.mean():.2f}")
+    adv = np.mean(rows["dynamic"]["thr"]) / max(np.mean(rows["static"]["thr"]), 1e-9)
+    emit("fig11_dynamic_advantage", 0.0, f"thr_ratio={adv:.3f}")
+    return rows

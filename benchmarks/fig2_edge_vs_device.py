@@ -1,0 +1,26 @@
+"""Fig. 2: edge-only vs device-only AlexNet latency under different
+bandwidths (paper: device ~2s+; edge 0.123s @1Mbps rising to 2.317s @50kbps)."""
+from __future__ import annotations
+
+from benchmarks.common import KBPS, Timer, alexnet_setup
+from repro.core.partitioner import branch_latency
+
+BANDWIDTHS_KBPS = [50, 100, 250, 500, 1000]
+
+
+def run(emit):
+    s = alexnet_setup()
+    g, planner = s["graph"], s["planner"]
+    fe, fd = planner.f_edge, planner.f_device
+    n = len(g.branches[-1])
+    for kbps in BANDWIDTHS_KBPS:
+        bw = kbps * KBPS
+        with Timer() as t:
+            edge = branch_latency(g, g.num_exits, n, fe, fd, bw)
+            dev = branch_latency(g, g.num_exits, 0, fe, fd, bw)
+        emit(f"fig2_edge_only_{kbps}kbps", t.us / 2,
+             f"latency_s={edge:.4f}")
+        emit(f"fig2_device_only_{kbps}kbps", t.us / 2,
+             f"latency_s={dev:.4f}")
+    return {"edge_1000kbps_s": branch_latency(g, g.num_exits, n, fe, fd, 1000 * KBPS),
+            "device_s": branch_latency(g, g.num_exits, 0, fe, fd, 1000 * KBPS)}

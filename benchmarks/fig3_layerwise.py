@@ -1,0 +1,25 @@
+"""Fig. 3: AlexNet layer-wise runtime and output data size (the
+heterogeneity that motivates partitioning)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Timer, alexnet_setup
+from repro.core.profiler import profile_graph
+
+
+def run(emit):
+    s = alexnet_setup()
+    profiles = profile_graph(s["graph"], s["params"], s["sample"])
+    out = {}
+    for p in profiles:
+        emit(f"fig3_layer_{p.name}", p.latency_s * 1e6,
+             f"out_bytes={p.out_bytes}")
+        out[p.name] = (p.latency_s, p.out_bytes)
+    # the paper's observation: latency rank != output-size rank
+    lat_rank = sorted(out, key=lambda k: -out[k][0])[:5]
+    size_rank = sorted(out, key=lambda k: -out[k][1])[:5]
+    emit("fig3_heterogeneity", 0.0,
+         f"top_latency={lat_rank[0]};top_size={size_rank[0]};"
+         f"distinct={lat_rank[0] != size_rank[0]}")
+    return out

@@ -1,0 +1,31 @@
+"""Fig. 8: (a) selection vs bandwidth at 1000ms SLO; (b) plan latency vs
+bandwidth; (c) selection vs latency requirement at 500kbps."""
+from __future__ import annotations
+
+from benchmarks.common import KBPS, Timer, alexnet_setup, set_slo
+
+
+def run(emit):
+    s = alexnet_setup()
+    planner = s["planner"]
+    out = {"a": [], "c": []}
+
+    set_slo(planner, 1.0)
+    for kbps in (50, 100, 150, 250, 400, 500, 750, 1000, 1250, 1500):
+        with Timer() as t:
+            plan = planner.plan(kbps * KBPS)
+        emit(f"fig8a_bw_{kbps}kbps", t.us,
+             f"exit={plan.exit_point};partition={plan.partition};"
+             f"latency_s={plan.latency_s:.4f};feasible={plan.feasible}")
+        out["a"].append((kbps, plan.exit_point, plan.partition,
+                         plan.latency_s, plan.feasible))
+
+    for req_ms in (100, 200, 300, 400, 500, 700, 1000):
+        set_slo(planner, req_ms / 1e3)
+        plan = planner.plan(500 * KBPS)
+        emit(f"fig8c_slo_{req_ms}ms", 0.0,
+             f"exit={plan.exit_point};partition={plan.partition};"
+             f"feasible={plan.feasible}")
+        out["c"].append((req_ms, plan.exit_point, plan.partition, plan.feasible))
+    set_slo(planner, 1.0)
+    return out

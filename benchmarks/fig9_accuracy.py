@@ -1,0 +1,38 @@
+"""Fig. 9: accuracy of four methods under different latency requirements at
+400 kbps (negative accuracy == deadline missed, as the paper plots it)."""
+from __future__ import annotations
+
+from benchmarks.common import KBPS, alexnet_setup, set_slo
+from repro.core.partitioner import branch_latency
+
+METHODS = ("edgent", "partition_only", "edge_only", "device_only")
+
+
+def run(emit):
+    s = alexnet_setup()
+    g, planner, acc = s["graph"], s["planner"], s["accuracy"]
+    fe, fd = planner.f_edge, planner.f_device
+    bw = 400 * KBPS
+    n = len(g.branches[-1])
+    out = {}
+    for req_ms in (100, 200, 300, 400, 500, 700, 1000):
+        slo = req_ms / 1e3
+        set_slo(planner, slo)
+        # edgent: joint optimization
+        plan = planner.plan(bw)
+        a_edgent = plan.accuracy if plan.feasible else -plan.accuracy
+        # partition-only: full model, best partition
+        from repro.core.partitioner import best_partition
+        _, lat_part = best_partition(g, g.num_exits, fe, fd, bw)
+        a_part = acc[-1] if lat_part <= slo else -acc[-1]
+        # edge-only / device-only: full model one tier
+        lat_edge = branch_latency(g, g.num_exits, n, fe, fd, bw)
+        lat_dev = branch_latency(g, g.num_exits, 0, fe, fd, bw)
+        a_edge = acc[-1] if lat_edge <= slo else -acc[-1]
+        a_dev = acc[-1] if lat_dev <= slo else -acc[-1]
+        vals = dict(zip(METHODS, (a_edgent, a_part, a_edge, a_dev)))
+        out[req_ms] = vals
+        for m, v in vals.items():
+            emit(f"fig9_{m}_{req_ms}ms", 0.0, f"accuracy={v:+.3f}")
+    set_slo(planner, 1.0)
+    return out

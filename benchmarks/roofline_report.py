@@ -1,0 +1,34 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts
+(EXPERIMENTS.md §Roofline).  Requires benchmarks/results/dryrun.json
+(produced by ``python -m repro.launch.dryrun --all``); emits nothing if the
+dry-run has not been executed yet."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def run(emit):
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing", 0.0, "run python -m repro.launch.dryrun --all")
+        return {}
+    from repro.launch.roofline import terms_from_record
+
+    with open(RESULTS) as f:
+        results = json.load(f)
+    out = {}
+    for key, rec in sorted(results.items()):
+        parts = key.split("|")
+        if len(parts) != 3 or parts[2] != "single" or rec.get("status") != "ok":
+            continue
+        t = terms_from_record(rec)
+        name = f"roofline_{t.arch}_{t.shape}"
+        dom_us = t.dominant() * 1e6
+        emit(name, dom_us,
+             f"compute_s={t.compute_s:.3e};memory_s={t.memory_s:.3e};"
+             f"collective_s={t.collective_s:.3e};bottleneck={t.bottleneck};"
+             f"useful={t.useful_ratio:.3f};roofline_frac={t.roofline_fraction:.3f}")
+        out[(t.arch, t.shape)] = t
+    return out

@@ -1,0 +1,53 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import json
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+BENCHES = (
+    "fig2_edge_vs_device",
+    "fig3_layerwise",
+    "table1_regression",
+    "fig8_selection",
+    "fig9_accuracy",
+    "fig10_dynamic",
+    "fig11_cdf",
+    "roofline_report",
+)
+
+
+def main() -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    rows = []
+
+    def emit(name: str, us_per_call: float, derived: str = ""):
+        line = f"{name},{us_per_call:.1f},{derived}"
+        rows.append(line)
+        print(line, flush=True)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in BENCHES:
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            mod.run(emit)
+        except Exception as e:
+            failures.append(mod_name)
+            emit(f"{mod_name}_FAILED", 0.0, f"{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    with open(os.path.join(RESULTS_DIR, "bench_rows.csv"), "w") as f:
+        f.write("name,us_per_call,derived\n" + "\n".join(rows) + "\n")
+    if failures:
+        print(f"# FAILED benches: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

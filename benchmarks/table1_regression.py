@@ -1,0 +1,23 @@
+"""Table I: per-layer-type latency regression quality (R^2 per type) and
+predicted-vs-measured check (paper Fig. 8b: curves nearly overlap)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import alexnet_setup
+from repro.core.profiler import profile_all_branches
+
+
+def run(emit):
+    s = alexnet_setup()
+    planner = s["planner"]
+    r2 = planner.f_edge.r2()
+    for kind, v in sorted(r2.items()):
+        emit(f"table1_r2_{kind}", 0.0, f"r2={v:.4f}")
+    # predicted vs measured total (edge tier, host scale)
+    profiles = profile_all_branches(s["graph"], s["params"], s["sample"])
+    meas = sum(p.latency_s for p in profiles if not p.name.startswith("b"))
+    pred = sum(planner.f_edge.predict(l) for l in s["graph"].branches[-1])
+    ratio = pred / (meas * planner.edge_factor)
+    emit("table1_pred_vs_measured", meas * 1e6, f"ratio={ratio:.3f}")
+    return {"r2": r2, "pred_over_measured": ratio}

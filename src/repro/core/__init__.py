@@ -1,0 +1,7 @@
+# The paper's primary contribution: joint DNN partitioning + right-sizing
+# under a latency SLO, for static and dynamic bandwidth environments.
+from repro.core.graph import GraphLayer, InferenceGraph, alexnet_graph, lm_graph  # noqa: F401
+from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,  # noqa: F401
+                                      RooflineLatencyModel, ScaledLatencyModel)
+from repro.core.partitioner import CoInferencePlan, optimize, optimize_with_fallback  # noqa: F401
+from repro.core.planner import EdgentPlanner  # noqa: F401

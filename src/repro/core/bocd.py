@@ -1,0 +1,119 @@
+"""Bayesian Online Change-point Detection (Adams & MacKay 2007), used by
+Algorithm 3 to detect bandwidth-state transitions (paper Sec. IV-C).
+
+Gaussian observation model with unknown mean and variance
+(Normal-Inverse-Gamma conjugate prior -> Student-t predictive), constant
+hazard H = 1/lambda.  The run-length posterior is maintained online; a
+change point is declared when the MAP run length drops.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+from numpy import vectorize
+
+_lgamma = vectorize(__import__("math").lgamma)
+
+
+def _student_t_logpdf(x, df, loc, scale):
+    z = (x - loc) / scale
+    return (_lgamma((df + 1) / 2) - _lgamma(df / 2)
+            - 0.5 * (np.log(df) + np.log(np.pi)) - np.log(scale)
+            - (df + 1) / 2 * np.log1p(z * z / df))
+
+
+@dataclass
+class BOCD:
+    hazard: float = 1 / 50.0        # expected segment length lambda = 50
+    mu0: float = 0.0
+    kappa0: float = 1.0
+    alpha0: float = 1.0
+    beta0: float = 1.0
+    max_run: int = 512
+    trunc: float = 1e-6
+
+    def __post_init__(self):
+        self.reset()
+
+    def reset(self):
+        self.t = 0
+        self.r_prob = np.array([1.0])           # P(r_t | x_1..t)
+        self.mu = np.array([self.mu0])
+        self.kappa = np.array([self.kappa0])
+        self.alpha = np.array([self.alpha0])
+        self.beta = np.array([self.beta0])
+        self.map_run = 0
+
+    def update(self, x: float) -> bool:
+        """Ingest one measurement; returns True when a change point fires."""
+        df = 2 * self.alpha
+        scale = np.sqrt(self.beta * (self.kappa + 1) / (self.alpha * self.kappa))
+        logpred = _student_t_logpdf(x, df, self.mu, scale)
+        pred = np.exp(logpred - logpred.max())
+        pred = pred * np.exp(logpred.max())     # unnormalized predictive
+
+        growth = self.r_prob * pred * (1 - self.hazard)
+        cp = float(np.sum(self.r_prob * pred * self.hazard))
+        new_r = np.concatenate([[cp], growth])
+        s = new_r.sum()
+        if s <= 0 or not np.isfinite(s):
+            new_r = np.zeros_like(new_r)
+            new_r[0] = 1.0
+        else:
+            new_r = new_r / s
+
+        # posterior parameter update
+        mu_new = np.concatenate([[self.mu0], (self.kappa * self.mu + x) / (self.kappa + 1)])
+        kappa_new = np.concatenate([[self.kappa0], self.kappa + 1])
+        alpha_new = np.concatenate([[self.alpha0], self.alpha + 0.5])
+        beta_new = np.concatenate([
+            [self.beta0],
+            self.beta + self.kappa * (x - self.mu) ** 2 / (2 * (self.kappa + 1))])
+
+        # truncate tail for O(max_run) updates: run lengths beyond the cap
+        # collapse into the boundary (standard SOR truncation; indices stay
+        # equal to run lengths so MAP-collapse detection remains valid)
+        if len(new_r) > self.max_run:
+            new_r = new_r[: self.max_run]
+            mu_new = mu_new[: self.max_run]
+            kappa_new = kappa_new[: self.max_run]
+            alpha_new = alpha_new[: self.max_run]
+            beta_new = beta_new[: self.max_run]
+            s = new_r.sum()
+            new_r = new_r / s if s > 0 else np.eye(len(new_r))[0]
+
+        prev_map = self.map_run
+        self.r_prob, self.mu = new_r, mu_new
+        self.kappa, self.alpha, self.beta = kappa_new, alpha_new, beta_new
+        self.map_run = int(np.argmax(self.r_prob))
+        self.t += 1
+        # change point: MAP run length collapsed
+        return self.map_run < prev_map - 2 or (self.map_run == 0 and prev_map > 3)
+
+    @property
+    def state_mean(self) -> float:
+        """Posterior mean of the current segment (MAP run length)."""
+        return float(self.mu[self.map_run])
+
+
+class BandwidthStateDetector:
+    """D(B_{1..t}) of Algorithm 3: wraps BOCD, exposes the current bandwidth
+    state (segment mean) and change flags."""
+
+    def __init__(self, hazard: float = 1 / 50.0):
+        self.bocd = BOCD(hazard=hazard)
+        self.history: List[float] = []
+        self.changes: List[int] = []
+
+    def update(self, bandwidth: float) -> float:
+        changed = self.bocd.update(float(bandwidth))
+        self.history.append(float(bandwidth))
+        if changed:
+            self.changes.append(len(self.history) - 1)
+        return self.bocd.state_mean
+
+    @property
+    def current_state(self) -> float:
+        return self.bocd.state_mean

@@ -1,0 +1,69 @@
+"""Co-inference executor — the co-inference stage (paper Sec. IV-A).
+
+Executes a :class:`CoInferencePlan` over an InferenceGraph across two tiers
+with a bandwidth-limited link.  Tiers and link are simulated on this host
+with a *virtual clock*: edge layers run at measured speed, device layers are
+billed at ``device_slowdown`` x, transfers at ``bytes / bandwidth``.  The
+executor returns both the result and the accounted end-to-end latency, so
+experiments are reproducible and independent of host jitter.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.graph import InferenceGraph
+from repro.core.partitioner import CoInferencePlan
+
+
+@dataclass
+class CoInferenceResult:
+    output: Any
+    latency_s: float          # virtual end-to-end latency
+    edge_s: float
+    device_s: float
+    transfer_s: float
+    exit_point: int
+    partition: int
+
+
+@dataclass
+class TwoTierExecutor:
+    graph: InferenceGraph
+    params: Any
+    bandwidth_bps: float
+    device_slowdown: float = 20.0
+    edge_slowdown: float = 1.0
+
+    def _run_layers(self, layers, x, slowdown: float):
+        total = 0.0
+        for layer in layers:
+            fn = jax.jit(lambda p, x, run=layer.run: run(p, x))
+            y = fn(self.params, x)          # warm cache so we time steady state
+            jax.block_until_ready(y)
+            t0 = time.perf_counter()
+            y = fn(self.params, x)
+            jax.block_until_ready(y)
+            total += (time.perf_counter() - t0) * slowdown
+            x = y
+        return x, total
+
+    def run(self, plan: CoInferencePlan, x, bandwidth_bps: Optional[float] = None
+            ) -> CoInferenceResult:
+        bw = bandwidth_bps or self.bandwidth_bps
+        branch = self.graph.branches[plan.exit_point - 1]
+        p = plan.partition
+        transfer = 0.0
+        if p > 0:
+            transfer += self.graph.input_bytes / bw
+            transfer += self.graph.cut_bytes(plan.exit_point, p) / bw
+        x_edge, t_edge = self._run_layers(branch[:p], x, self.edge_slowdown)
+        out, t_dev = self._run_layers(branch[p:], x_edge, self.device_slowdown)
+        return CoInferenceResult(
+            output=out, latency_s=t_edge + t_dev + transfer,
+            edge_s=t_edge, device_s=t_dev, transfer_s=transfer,
+            exit_point=plan.exit_point, partition=p)

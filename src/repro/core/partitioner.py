@@ -1,0 +1,97 @@
+"""Algorithm 1 — Runtime Optimizer for the static environment.
+
+Joint exhaustive search over (exit point i, partition point p): maximize
+accuracy subject to the latency requirement, preferring larger exits (the
+paper iterates i = M..1 and returns the first branch whose best partition
+meets the deadline).
+
+Partition convention (paper Sec. IV-B, re-indexed 0-based; DESIGN.md §3):
+``p`` = number of leading layers of branch ``i`` that run on the EDGE tier.
+The input lives on the device, so a non-trivial cut pays ``Input/B`` uplink,
+edge computes layers [0, p), ships the intermediate ``D_{p}`` downlink, and
+the device computes [p, N).  ``p = 0`` -> device-only (no transfers);
+``p = N`` -> edge-only (uplink + result return).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+from repro.core.graph import InferenceGraph
+
+
+@dataclass
+class CoInferencePlan:
+    exit_point: int        # 1-based (paper numbering; num_exits = full model)
+    partition: int         # layers on the edge tier
+    latency_s: float       # predicted end-to-end latency
+    accuracy: float
+    feasible: bool = True
+
+
+def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
+                   f_edge, f_device, bandwidth_bps: float,
+                   edge_load: float = 1.0) -> float:
+    """A_{i,p} of Algorithm 1 (seconds).  ``bandwidth_bps`` in bytes/s."""
+    branch = graph.branches[exit_idx - 1]
+    n = len(branch)
+    t = 0.0
+    if p > 0:
+        t += graph.input_bytes / bandwidth_bps            # Input/B uplink
+        t += graph.cut_bytes(exit_idx, p) / bandwidth_bps  # D_{p-1}/B downlink
+    for j, layer in enumerate(branch):
+        if j < p:
+            t += f_edge.predict(layer) * edge_load
+        else:
+            t += f_device.predict(layer)
+    return t
+
+
+def best_partition(graph: InferenceGraph, exit_idx: int, f_edge, f_device,
+                   bandwidth_bps: float) -> Tuple[int, float]:
+    """Exhaustive scan over p = 0..N for one branch; returns (p*, latency)."""
+    n = len(graph.branches[exit_idx - 1])
+    best = (0, float("inf"))
+    for p in range(n + 1):
+        lat = branch_latency(graph, exit_idx, p, f_edge, f_device, bandwidth_bps)
+        if lat < best[1]:
+            best = (p, lat)
+    return best
+
+
+def optimize(graph: InferenceGraph, f_edge, f_device, bandwidth_bps: float,
+             latency_req_s: float) -> Optional[CoInferencePlan]:
+    """Algorithm 1.  Returns None when no (i, p) meets the deadline
+    (the paper's NULL)."""
+    for i in range(graph.num_exits, 0, -1):       # largest exit first
+        p, lat = best_partition(graph, i, f_edge, f_device, bandwidth_bps)
+        if lat <= latency_req_s:
+            return CoInferencePlan(exit_point=i, partition=p, latency_s=lat,
+                                   accuracy=graph.accuracy[i - 1])
+    return None
+
+
+def optimize_with_fallback(graph, f_edge, f_device, bandwidth_bps,
+                           latency_req_s) -> CoInferencePlan:
+    """Like :func:`optimize` but when infeasible returns the minimum-latency
+    plan flagged infeasible — used by the serving engine as a straggler
+    rescue (DESIGN.md §2)."""
+    plan = optimize(graph, f_edge, f_device, bandwidth_bps, latency_req_s)
+    if plan is not None:
+        return plan
+    best = None
+    for i in range(1, graph.num_exits + 1):
+        p, lat = best_partition(graph, i, f_edge, f_device, bandwidth_bps)
+        if best is None or lat < best.latency_s:
+            best = CoInferencePlan(i, p, lat, graph.accuracy[i - 1], feasible=False)
+    return best
+
+
+def search_latency(graph, f_edge, f_device, bandwidth_bps, latency_req_s,
+                   repeats: int = 10) -> float:
+    """Wall-clock of one Algorithm-1 search (paper claims < 1 ms)."""
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        optimize(graph, f_edge, f_device, bandwidth_bps, latency_req_s)
+    return (time.perf_counter() - t0) / repeats

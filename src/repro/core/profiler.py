@@ -1,0 +1,90 @@
+"""Layer-wise profiling harness (paper Fig. 3 + the offline stage of the
+static configurator).
+
+Times each layer of an InferenceGraph on this host and emits
+:class:`ProfileRecord` rows for the regression fit.  The device/edge
+asymmetry of the paper's testbed (Raspberry Pi ~ 20x slower than the
+desktop) is emulated with a latency scale factor, recorded in the output.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import InferenceGraph
+from repro.core.latency_model import ProfileRecord
+
+DEVICE_SLOWDOWN = 20.0  # Raspberry Pi 3 vs desktop PC (paper Sec. V-A)
+
+
+@dataclass
+class LayerProfile:
+    name: str
+    kind: str
+    latency_s: float          # measured on this host ("edge" tier)
+    out_bytes: int
+    features: Dict[str, float]
+
+
+def profile_graph(graph: InferenceGraph, params, input_x, *, repeats: int = 5,
+                  warmup: int = 2) -> List[LayerProfile]:
+    """Run the longest branch layer-by-layer, timing each layer."""
+    branch = graph.branches[-1]
+    profiles = []
+    x = input_x
+    for layer in branch:
+        fn = jax.jit(lambda p, x, run=layer.run: run(p, x))
+        for _ in range(warmup):
+            y = fn(params, x)
+            jax.block_until_ready(y)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            y = fn(params, x)
+            jax.block_until_ready(y)
+            ts.append(time.perf_counter() - t0)
+        profiles.append(LayerProfile(
+            name=layer.name, kind=layer.kind,
+            latency_s=float(np.median(ts)),
+            out_bytes=layer.out_bytes, features=layer.features))
+        x = y
+    return profiles
+
+
+def profiles_to_records(profiles: Sequence[LayerProfile],
+                        scale: float = 1.0) -> List[ProfileRecord]:
+    return [ProfileRecord(kind=p.kind, features=p.features,
+                          latency_s=p.latency_s * scale) for p in profiles]
+
+
+def profile_all_branches(graph: InferenceGraph, params, input_x, *,
+                         repeats: int = 3) -> List[LayerProfile]:
+    """Profile every branch (side layers differ across branches)."""
+    seen = set()
+    out: List[LayerProfile] = []
+    for bi in range(graph.num_exits, 0, -1):
+        x = input_x
+        for layer in graph.branches[bi - 1]:
+            if layer.name in seen:
+                x = jax.jit(lambda p, x, run=layer.run: run(p, x))(params, x)
+                continue
+            seen.add(layer.name)
+            fn = jax.jit(lambda p, x, run=layer.run: run(p, x))
+            y = fn(params, x)
+            jax.block_until_ready(y)
+            ts = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                y = fn(params, x)
+                jax.block_until_ready(y)
+                ts.append(time.perf_counter() - t0)
+            out.append(LayerProfile(layer.name, layer.kind,
+                                    float(np.median(ts)), layer.out_bytes,
+                                    layer.features))
+            x = y
+    return out

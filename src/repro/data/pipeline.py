@@ -1,0 +1,48 @@
+"""Sharded host data pipeline: background prefetch + device put with the
+batch sharded over the mesh ``data`` (and ``pod``) axes."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class PrefetchLoader:
+    """Wraps a host batch iterator with a background prefetch thread and
+    (optionally) sharded device placement."""
+
+    def __init__(self, it: Iterator, mesh: Optional[Mesh] = None,
+                 spec: Optional[P] = None, depth: int = 2):
+        self.it = it
+        self.mesh, self.spec = mesh, spec
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _place(self, batch):
+        if self.mesh is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        def put(x):
+            return jax.device_put(x, NamedSharding(self.mesh, self.spec))
+        return jax.tree.map(put, batch)
+
+    def _worker(self):
+        for batch in self.it:
+            if self._stop.is_set():
+                return
+            self.q.put(batch)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        batch = self.q.get()
+        return self._place(batch)
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the fused exit-head kernel.
+
+Given normed hidden states ``h`` [B, S, D] and the tied embedding table
+``emb`` [V, D], produce per position:
+
+    token  = argmax_v h . emb_v
+    conf   = max softmax probability  (maxprob confidence)
+    ent    = entropy of the softmax   (the paper's accuracy proxy knob)
+
+The naive version materializes the full [B, S, V] logits; the Pallas kernel
+streams the vocab through VMEM tiles with an online max/sum/argmax
+accumulator and never writes logits to HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_confidence(h, emb):
+    """Returns dict(token [B,S] int32, conf [B,S] f32, entropy [B,S] f32)."""
+    logits = jnp.einsum("bsd,vd->bsv", h, emb).astype(jnp.float32)
+    m = logits.max(-1)
+    p = jax.nn.softmax(logits, axis=-1)
+    ent = -jnp.sum(p * jnp.log(jnp.clip(p, 1e-30, 1.0)), axis=-1)
+    return {
+        "token": jnp.argmax(logits, -1).astype(jnp.int32),
+        "conf": p.max(-1),
+        "entropy": ent,
+    }

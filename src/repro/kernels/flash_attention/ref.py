@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """q: [B, H, S, hd]; k/v: [B, KV, T, hd] -> [B, H, S, hd]; f32 softmax."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qr, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), T - S)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the SSM scan kernel: the sequential recurrence from
+``repro.models.linear_scan.scan_sequential`` (model layout)."""
+from __future__ import annotations
+
+from repro.models.linear_scan import scan_sequential
+
+
+def ssm_scan(q, k, v, log_w, state, u=None):
+    """q/k/log_w: [B,S,H,dk]; v: [B,S,H,dv]; state: [B,H,dk,dv]."""
+    return scan_sequential(q, k, v, log_w, state, u=u)

@@ -1,0 +1,329 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must succeed
+on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for every
+assigned cell.  Per cell we record:
+
+  * memory_analysis()  — argument/output/temp bytes per device (CPU-backend
+    temp is pessimistic: no TPU memory passes, no donation aliasing — the
+    analytic state estimate is recorded alongside);
+  * cost_analysis()    — HLO FLOPs + bytes accessed (roofline numerator);
+  * collective bytes   — parsed from the post-partitioning HLO text: operand
+    bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute (per-device program => per-chip traffic).
+
+Results append to benchmarks/results/dryrun.json (reruns skip done cells).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import numpy as np
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun.json")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+# `%x = bf16[8,128]{1,0} all-gather(...)` — result type + collective kind
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?(\w+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_WHILE_RE = re.compile(r"while\(.*?condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _result_bytes(dt: str, dims: str) -> int:
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _split_computations(hlo_text: str):
+    """Map computation name -> list of instruction lines."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$", s)
+        if ("{" in s and ("->" in s or s.startswith("ENTRY"))) and m:
+            cur = m.group(1)
+            comps[cur] = []
+        elif s == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _link_bytes(kind: str, result: int, g: int) -> float:
+    """Per-device ring traffic for one execution, from the result size."""
+    g = max(g, 2)
+    if kind == "all-gather":
+        return result * (g - 1) / g            # operand = result/g, send (g-1) shards
+    if kind == "reduce-scatter":
+        return result * (g - 1)                # operand = result*g
+    if kind == "all-reduce":
+        return 2.0 * result * (g - 1) / g
+    return result * (g - 1) / g if kind == "all-to-all" else float(result)
+
+
+def collective_stats(hlo_text: str):
+    """Per-device collective traffic from post-SPMD HLO text, with
+    while-loop (scan) bodies multiplied by their trip counts (estimated from
+    the largest integer constant in the loop condition computation)."""
+    comps = _split_computations(hlo_text)
+
+    # trip-count estimate per condition computation
+    def trip_of(cond_name):
+        best = 1
+        for line in comps.get(cond_name, []):
+            if "compare" in line or "constant" in line:
+                for m in _CONST_RE.finditer(line):
+                    best = max(best, int(m.group(1)))
+        return best
+
+    memo = {}
+
+    def comp_stats(name):
+        if name in memo:
+            return memo[name]
+        totals = {k: {"count": 0.0, "bytes": 0.0, "link_bytes": 0.0}
+                  for k in _COLLECTIVES}
+        for line in comps.get(name, []):
+            m = _COLL_RE.search(line)
+            if m:
+                dt, dims, kind = m.groups()
+                res = _result_bytes(dt, dims)
+                gm = _GROUPS_RE.search(line)
+                if gm:
+                    g = int(gm.group(2))
+                else:
+                    gb = _GROUPS_BRACES_RE.search(line)
+                    g = len(gb.group(1).split(",")) if gb else 2
+                totals[kind]["count"] += 1
+                totals[kind]["bytes"] += res
+                totals[kind]["link_bytes"] += _link_bytes(kind, res, g)
+                continue
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.groups()
+                trips = trip_of(cond)
+                sub = comp_stats(body)
+                for k in _COLLECTIVES:
+                    for f in ("count", "bytes", "link_bytes"):
+                        totals[k][f] += trips * sub[k][f]
+        memo[name] = totals
+        return totals
+
+    # entry computation: the one holding top-level while ops; fall back to sum
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    totals = comp_stats(entry) if entry else {
+        k: {"count": 0, "bytes": 0, "link_bytes": 0} for k in _COLLECTIVES}
+    out = {k: {"count": totals[k]["count"], "bytes": totals[k]["bytes"],
+               "link_bytes": totals[k]["link_bytes"]} for k in _COLLECTIVES}
+    out["total_bytes"] = sum(out[k]["bytes"] for k in _COLLECTIVES)
+    out["total_link_bytes"] = sum(out[k]["link_bytes"] for k in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             exit_point=None, moe_dispatch="einsum", attn_impl="auto",
+             ce_chunk=512, scan_chunk=16, kv_quant=False, seq_parallel=False,
+             extra_tag="") -> dict:
+    import jax
+    from repro.config import SHAPES, cell_applicable
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import make_step
+    from repro.models import Model
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model(cfg)
+    kw = {}
+    if shape.kind == "train":
+        kw = dict(moe_dispatch=moe_dispatch, attn_impl=attn_impl,
+                  ce_chunk=ce_chunk, scan_chunk=scan_chunk,
+                  seq_parallel=seq_parallel)
+    elif shape.kind == "prefill":
+        kw = dict(moe_dispatch=moe_dispatch, attn_impl=attn_impl)
+    else:
+        kw = dict(moe_dispatch=moe_dispatch, exit_point=exit_point,
+                  kv_quant=kv_quant)
+    step, abstract_inputs = make_step(model, mesh, shape, **kw)
+
+    t0 = time.time()
+    with mesh:
+        lowered = step.lower(*abstract_inputs())
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = collective_stats(txt)
+    from repro.launch.hlo_cost import walk_costs
+    flops_walked, bytes_walked = walk_costs(txt, fused=True)
+    _, bytes_literal = walk_costs(txt, fused=False)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    # archive the HLO for offline re-analysis (no recompiles needed)
+    import gzip
+    hlo_dir = os.path.join(os.path.dirname(os.path.abspath(DEFAULT_OUT)), "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    tagstr = f"_{extra_tag}" if extra_tag else ""
+    hlo_path = os.path.join(
+        hlo_dir, f"{arch}_{shape_name}_{'multi' if multi_pod else 'single'}{tagstr}.txt.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(txt)
+
+    # analytic steady-state per-device bytes (params [+opt] [+cache])
+    pbytes = int(sum(np.prod(l.shape) * l.dtype.itemsize
+                     for l in jax.tree.leaves(model.abstract_params())))
+    state = pbytes
+    if shape.kind == "train":
+        state += 2 * 4 * (pbytes // 2) + pbytes          # f32 moments + grads
+    if shape.kind != "train":
+        cache = jax.eval_shape(lambda: model.init_cache(
+            shape.global_batch, shape.seq_len, enc_len=shape.seq_len))
+        state += int(sum(np.prod(l.shape) * l.dtype.itemsize
+                         for l in jax.tree.leaves(cache)))
+
+    return {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "flops": ca.get("flops", 0.0),
+        "bytes_accessed": ca.get("bytes accessed", 0.0),
+        "flops_walked": flops_walked,      # loop-aware (see hlo_cost.py)
+        "bytes_walked": bytes_walked,      # fusion-closure byte model
+        "bytes_literal": bytes_literal,    # every materialized op billed
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "generated_code_bytes": ma.generated_code_size_in_bytes,
+        },
+        "analytic_state_bytes_per_chip": state // n_chips,
+        "tag": extra_tag,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(DEFAULT_OUT))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--exit-point", type=int, default=None)
+    ap.add_argument("--moe-dispatch", default="einsum")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--ce-chunk", type=int, default=512)
+    ap.add_argument("--scan-chunk", type=int, default=16)
+    ap.add_argument("--kv-quant", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from repro.config import SHAPES
+    from repro.configs import ARCH_IDS
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    cells.append((arch, shape, mp))
+    else:
+        for mp in meshes:
+            cells.append((args.arch, args.shape, mp))
+
+    n_ok = n_skip = n_fail = 0
+    for arch, shape, mp in cells:
+        key = f"{arch}|{shape}|{'multi' if mp else 'single'}"
+        if args.tag:
+            key += f"|{args.tag}"
+        if key in results and results[key].get("status") in ("ok", "skipped") \
+                and not args.force:
+            print(f"[cached] {key}: {results[key]['status']}")
+            n_ok += results[key]["status"] == "ok"
+            n_skip += results[key]["status"] == "skipped"
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            r = run_cell(arch, shape, mp, exit_point=args.exit_point,
+                         moe_dispatch=args.moe_dispatch,
+                         attn_impl=args.attn_impl, ce_chunk=args.ce_chunk,
+                         scan_chunk=args.scan_chunk, kv_quant=args.kv_quant,
+                         seq_parallel=args.seq_parallel, extra_tag=args.tag)
+        except Exception as e:  # record and continue
+            r = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                 "trace": traceback.format_exc()[-2000:]}
+        results[key] = r
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        if r["status"] == "ok":
+            n_ok += 1
+            print(f"    ok: lower={r['lower_s']}s compile={r['compile_s']}s "
+                  f"flops={r['flops']:.3e} coll={r['collectives']['total_bytes']:.3e}B",
+                  flush=True)
+        elif r["status"] == "skipped":
+            n_skip += 1
+            print(f"    skipped: {r['reason']}", flush=True)
+        else:
+            n_fail += 1
+            print(f"    ERROR: {r['error']}", flush=True)
+    print(f"\ndone: ok={n_ok} skipped={n_skip} failed={n_fail}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Loop-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts every instruction ONCE — a
+``lax.scan`` over 40 layers contributes a single body, undercounting FLOPs
+and bytes by the trip count.  This walker parses the HLO text into
+computations, builds a per-computation symbol table (every instruction line
+carries its result type inline), and computes:
+
+  * flops  — 2 * |result| * contraction_size for dot/convolution (recursing
+    into fusion computations), everything else ~ |result| per arithmetic op;
+  * bytes  — fusion-boundary traffic: each top-level instruction reads its
+    operands and writes its result (parameter / gte / tuple / bitcast /
+    constant are free); fusions count only their boundary;
+  * while loops multiply their body costs by the trip count (largest integer
+    compared against in the condition computation).
+
+Used by the dry-run for the roofline terms; validated against analytic
+MODEL_FLOPS in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = ("parameter", "get-tuple-element", "tuple(", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota")
+_ELEMENTWISE_HINT = ("add", "multiply", "subtract", "divide", "exponential",
+                     "maximum", "minimum", "compare", "select", "convert",
+                     "tanh", "log", "rsqrt", "sqrt", "power", "negate", "abs",
+                     "and", "or", "xor", "not", "sign", "floor", "ceil",
+                     "round", "clamp", "sine", "cosine", "exponential-minus-one")
+# ops the TPU fusion pipeline folds into neighbours (no HBM round trip)
+_FUSABLE = ("broadcast", "reshape", "slice", "pad", "reverse", "rev",
+            "concatenate", "reduce", "transpose", "map")
+
+
+def _parse_type(s: str) -> Tuple[int, int]:
+    """First type in s -> (elements, bytes)."""
+    m = _TYPE_RE.search(s)
+    if not m:
+        return 0, 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dt, 0)
+
+
+def _all_types(s: str):
+    out = []
+    for m in _TYPE_RE.finditer(s):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else [],
+                    n * _DTYPE_BYTES[dt]))
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    rhs: str
+    elems: int
+    nbytes: int
+    dims: List[int]
+
+
+def _split_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        s = raw.rstrip()
+        st = s.strip()
+        if st.endswith("{") and ("->" in st or st.startswith("ENTRY")):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", st)
+            cur = m.group(1) if m else None
+            if cur:
+                comps[cur] = []
+            continue
+        if st == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(st)
+        if not im:
+            continue
+        name, rhs = im.groups()
+        tys = _all_types(rhs.split(" ", 2)[0] if rhs else "")
+        if tys:
+            dt, dims, nb = tys[0]
+            elems = 1
+            for d in dims:
+                elems *= d
+        else:
+            dims, nb, elems = [], 0, 0
+        comps[cur].append(Instr(name, rhs, elems, nb, dims))
+    return comps
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __iadd__(self, o):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k)
+
+
+class HloCostModel:
+    def __init__(self, text: str, fused: bool = True):
+        self.fused = fused
+        self.comps = _split_computations(text)
+        self.symtab: Dict[str, Dict[str, Instr]] = {
+            c: {i.name: i for i in instrs} for c, instrs in self.comps.items()}
+        self._memo: Dict[str, Cost] = {}
+        entry = None
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+                entry = m.group(1) if m else None
+                break
+        self.entry = entry if entry in self.comps else (
+            max(self.comps, key=lambda c: len(self.comps[c])) if self.comps else None)
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, cond: str) -> int:
+        best = 1
+        for i in self.comps.get(cond, []):
+            for m in _CONST_RE.finditer(i.rhs):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _operands(self, comp: str, rhs: str):
+        lp = rhs.find("(")
+        if lp < 0:
+            return []
+        depth, end = 1, len(rhs)
+        for i in range(lp + 1, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        tab = self.symtab.get(comp, {})
+        out = []
+        for m in _OPNAME_RE.finditer(rhs[lp:end]):
+            ins = tab.get(m.group(1))
+            if ins is not None:
+                out.append(ins)
+        return out
+
+    def _operand_bytes(self, comp: str, rhs: str, hbm_only: bool = False) -> float:
+        """Sum operand bytes.  ``hbm_only``: bill only operands that enter the
+        computation from outside (parameter / get-tuple-element / constant) —
+        locally-produced values live in VMEM under the fusion assumption."""
+        total = 0.0
+        for ins in self._operands(comp, rhs):
+            if hbm_only and not any(t in ins.rhs for t in (
+                    "parameter(", "get-tuple-element(", "constant(")):
+                continue
+            total += ins.nbytes
+        return total
+
+    def _dot_flops(self, comp: str, ins: Instr) -> float:
+        cd = _CDIMS_RE.search(ins.rhs)
+        contract = 1
+        ops = _OPNAME_RE.findall(ins.rhs[ins.rhs.find("("):])
+        lhs = self.symtab.get(comp, {}).get(ops[0]) if ops else None
+        if cd and lhs is not None:
+            for d in (int(x) for x in cd.group(1).split(",") if x):
+                if d < len(lhs.dims):
+                    contract *= lhs.dims[d]
+        return 2.0 * ins.elems * contract
+
+    def _conv_flops(self, comp: str, ins: Instr) -> float:
+        ops = _OPNAME_RE.findall(ins.rhs[ins.rhs.find("("):])
+        ker = self.symtab.get(comp, {}).get(ops[1]) if len(ops) > 1 else None
+        k = 1
+        if ker is not None and ker.dims:
+            for d in ker.dims[:-1]:       # spatial * in_ch
+                k *= d
+        return 2.0 * ins.elems * k
+
+    @staticmethod
+    def _opname(rhs: str) -> str:
+        """Op token: first lowercase identifier followed by '(' after the
+        result type, e.g. 'bf16[8]{0} dot(%a, %b)' -> 'dot'."""
+        m = re.search(r"(?:^|\s|\})([a-z][a-z0-9\-\.]*)\(", rhs)
+        return m.group(1) if m else ""
+
+    # ------------------------------------------------------------------
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()      # guard cycles
+        total = Cost()
+        for ins in self.comps.get(comp, []):
+            rhs = ins.rhs
+            op = self._opname(rhs)
+            if op == "while":
+                wm = _WHILE_RE.search(rhs)
+                if wm:
+                    cond, body = wm.groups()
+                    total += self.computation_cost(body).scaled(self._trip_count(cond))
+                total += Cost(0.0, float(ins.nbytes))
+                continue
+            if op == "fusion":
+                cm = _CALLS_RE.search(rhs)
+                inner = self.computation_cost(cm.group(1)) if cm else Cost()
+                if self.fused:
+                    # TPU assumption: only loop-carried state / weights
+                    # (parameter / gte operands) are HBM-resident; locals
+                    # between CPU-granularity fusions stay in VMEM
+                    ob = self._operand_bytes(comp, rhs, hbm_only=True)
+                    total += Cost(inner.flops, ob)
+                else:
+                    total += Cost(inner.flops,
+                                  float(ins.nbytes) + self._operand_bytes(comp, rhs))
+                continue
+            if op in ("call", "conditional", "map"):
+                cm = _CALLS_RE.search(rhs)
+                if cm:
+                    total += self.computation_cost(cm.group(1))
+                total += Cost(0.0, float(ins.nbytes))
+                continue
+            if op == "dot":
+                ob = self._operand_bytes(comp, rhs, hbm_only=self.fused)
+                rb = 0.0 if self.fused else float(ins.nbytes)
+                total += Cost(self._dot_flops(comp, ins), rb + ob)
+                continue
+            if op == "convolution":
+                total += Cost(self._conv_flops(comp, ins),
+                              float(ins.nbytes) + self._operand_bytes(comp, rhs))
+                continue
+            if op == "dynamic-slice":
+                total += Cost(0.0, float(ins.nbytes))     # reads slice, not buffer
+                continue
+            if op == "dynamic-update-slice":
+                ops_ = self._operands(comp, rhs)
+                upd = sum(o.nbytes for o in ops_[1:2])    # the written slice
+                total += Cost(0.0, 2.0 * float(upd))
+                continue
+            if op in ("parameter", "get-tuple-element", "tuple", "bitcast",
+                      "constant", "after-all", "partition-id", "replica-id",
+                      "iota", "copy-start", "copy-done") or op == "":
+                continue
+            arith = any(op.startswith(e) for e in _ELEMENTWISE_HINT)
+            flops = float(ins.elems) if arith else 0.0
+            if self.fused and (arith or op in _FUSABLE):
+                # fusion-closure estimate: elementwise chains fuse into their
+                # producers/consumers on TPU — no HBM round-trip billed
+                total += Cost(flops, 0.0)
+                continue
+            total += Cost(flops, float(ins.nbytes) + self._operand_bytes(comp, rhs))
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.computation_cost(self.entry)
+
+
+def walk_costs(hlo_text: str, fused: bool = True) -> Tuple[float, float]:
+    """Returns (flops, bytes) per device, loop-aware.  ``fused=True`` applies
+    the fusion-closure byte model (TPU assumption); ``fused=False`` bills
+    every materialized op (the literal CPU-backend lowering)."""
+    c = HloCostModel(hlo_text, fused=fused).entry_cost()
+    return c.flops, c.bytes

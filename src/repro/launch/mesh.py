@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_parallel: int = 1) -> Mesh:
+    """Tiny mesh over the real host devices (tests / examples)."""
+    n = len(jax.devices())
+    data = max(1, n // model_parallel)
+    return jax.make_mesh((data, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes that shard the batch dimension."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

@@ -1,0 +1,119 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HLO_bytes / (chips * hbm_bw)
+    collective = per-chip link bytes / link_bw        (already per-device)
+
+plus MODEL_FLOPS = 6*N*D (training; 2*N*D forward-only) with N = (active)
+params and D = tokens, and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Note on units: ``cost_analysis()`` on the CPU backend reports FLOPs/bytes of
+the *per-device partitioned* module; we convert to per-chip terms directly
+(no further division), and cross-check against the analytic MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.config import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, SHAPES
+from repro.configs import get_config
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+    bottleneck: str
+    roofline_fraction: float      # model-useful time / dominant term
+
+    def dominant(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the cell: 6*N*D train, 2*N*D inference."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def terms_from_record(rec: dict, *, chips: Optional[int] = None,
+                      peak: float = PEAK_FLOPS_BF16, hbm: float = HBM_BW,
+                      link: float = ICI_BW) -> RooflineTerms:
+    chips = chips or rec["chips"]
+    # prefer the loop-aware walked costs (cost_analysis counts scan bodies once)
+    flops = float(rec.get("flops_walked") or rec["flops"])
+    byts = float(rec.get("bytes_walked") or rec["bytes_accessed"])
+    coll = float(rec["collectives"]["total_link_bytes"])
+    # cost_analysis of the SPMD module is per-device
+    compute = flops / peak
+    memory = byts / hbm
+    collective = coll / link
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / max(flops * chips, 1.0)
+    dom = max(compute, memory, collective)
+    name = ("compute" if dom == compute else
+            "memory" if dom == memory else "collective")
+    ideal = mf / (chips * peak)
+    return RooflineTerms(
+        arch=rec["arch"], shape=rec["shape"],
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        model_flops=mf, hlo_flops=flops * chips, useful_ratio=useful,
+        bottleneck=name, roofline_fraction=ideal / max(dom, 1e-30))
+
+
+def load_results(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(path: str, mesh: str = "single", tag: str = "") -> str:
+    results = load_results(path)
+    lines = [
+        f"{'arch':26s} {'shape':12s} {'compute_s':>11s} {'memory_s':>11s} "
+        f"{'collect_s':>11s} {'bottleneck':>10s} {'useful':>7s} {'roofline%':>9s}"]
+    for key, rec in sorted(results.items()):
+        parts = key.split("|")
+        if len(parts) < 3 or parts[2] != mesh:
+            continue
+        if (len(parts) > 3) != bool(tag) or (tag and parts[3] != tag):
+            continue
+        if rec.get("status") == "skipped":
+            lines.append(f"{parts[0]:26s} {parts[1]:12s} {'skipped: ' + rec['reason']}")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"{parts[0]:26s} {parts[1]:12s} ERROR")
+            continue
+        t = terms_from_record(rec)
+        lines.append(
+            f"{t.arch:26s} {t.shape:12s} {t.compute_s:11.4e} {t.memory_s:11.4e} "
+            f"{t.collective_s:11.4e} {t.bottleneck:>10s} {t.useful_ratio:7.3f} "
+            f"{100*t.roofline_fraction:8.1f}%")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.abspath(os.path.join(
+        os.path.dirname(__file__), "../../../benchmarks/results/dryrun.json")))
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    print(report(args.results, args.mesh, args.tag))

@@ -1,0 +1,68 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id>``.
+
+Runs the Edgent-planned two-tier serving engine on the smoke config: builds
+the LM inference graph, arms the planner (static or dynamic configurator),
+streams batched requests against a bandwidth trace, reports SLO attainment /
+exit statistics — the paper's co-inference stage as a service.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.core import EdgentPlanner, lm_graph
+from repro.core.latency_model import RooflineLatencyModel
+from repro.data.bandwidth import belgium_lte_like, dcn_trace
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.serving.tiers import Link
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--slo-ms", type=float, default=400.0)
+    ap.add_argument("--dynamic", action="store_true")
+    ap.add_argument("--trace", default="dcn", choices=["dcn", "lte"])
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = Model(cfg)
+    rng = jax.random.key(0)
+    params = model.init_params(rng, dtype=jnp.float32)
+
+    # tiers: edge = 8-chip slice, device = 1 chip (datacenter adaptation);
+    # full-size graph for virtual timing, smoke model for token values
+    graph = lm_graph(get_config(args.arch), batch=args.batch, seq=1)
+    f_edge = RooflineLatencyModel(chips=8, efficiency=0.4)
+    f_device = RooflineLatencyModel(chips=1, efficiency=0.4)
+    planner = EdgentPlanner(graph, latency_req_s=args.slo_ms / 1e3)
+    planner.with_models(f_edge, f_device)
+    trace = (dcn_trace(0, 2048) if args.trace == "dcn"
+             else belgium_lte_like(0, 2048))
+    if args.dynamic:
+        hist = [trace[i : i + 49] for i in range(0, 980, 49)]
+        planner.offline_dynamic(hist)
+    link = Link(trace_bps=trace)
+
+    engine = ServingEngine(model, params, graph, planner, link,
+                           batch_size=args.batch, dynamic=args.dynamic)
+    rs = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rs.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                    max_new_tokens=args.new_tokens,
+                    slo_s=args.slo_ms / 1e3)
+            for i in range(args.requests)]
+    stats = engine.serve(reqs)
+    print("summary:", stats.summary())
+
+
+if __name__ == "__main__":
+    main()

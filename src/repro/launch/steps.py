@@ -1,0 +1,199 @@
+"""Jitted, sharded step builders: train_step / prefill_step / serve_step.
+
+One function per (model, mesh, shape-kind); in/out shardings are explicit
+NamedSharding trees (FSDP on ``data``, TP on ``model``, batch over
+``pod``+``data``), params/opt-state/cache donated.  The dry-run lowers these
+with ShapeDtypeStruct inputs; the real drivers execute them.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.launch.mesh import batch_axes
+from repro.models.api import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+
+
+def _ns(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """PartitionSpec tree matching Model.make_inputs output."""
+    b = batch_axes(mesh)
+    # decide batch shardability: every batch-axis group must divide B
+    groups = 1
+    for ax in b:
+        groups *= mesh.shape[ax]
+    bspec = b if shape.global_batch % groups == 0 else None
+    if shape.kind == "train":
+        out = {"tokens": P(bspec, None)}
+        if cfg.is_encdec:
+            out["frames"] = P(bspec, None, None)
+        if cfg.frontend == "vision":
+            out["prefix_emb"] = P(bspec, None, None)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": P(bspec, None)}
+        if cfg.is_encdec:
+            out["frames"] = P(bspec, None, None)
+        if cfg.frontend == "vision":
+            out["prefix_emb"] = P(bspec, None, None)
+        return out
+    return {"tokens": P(bspec, None), "pos": P()}
+
+
+def cache_sharding_axes(shape: ShapeConfig, mesh: Mesh):
+    """(batch_axes, seq_axes) for the KV cache / recurrent state."""
+    b = batch_axes(mesh)
+    groups = 1
+    for ax in b:
+        groups *= mesh.shape[ax]
+    if shape.global_batch % groups == 0:
+        return b, "model"
+    # tiny batch (long-context): replicate batch, shard cache seq everywhere
+    return None, tuple(mesh.axis_names)
+
+
+# ----------------------------------------------------------------------------
+# train
+# ----------------------------------------------------------------------------
+
+def make_train_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
+                    moment_dtype=jnp.float32, peak_lr: float = 3e-4,
+                    warmup: int = 200, total_steps: int = 10000,
+                    remat: bool = True, moe_dispatch: str = "einsum",
+                    attn_impl: str = "auto", use_kernel: bool = False,
+                    ce_chunk: int = 512, scan_chunk: int = 16,
+                    seq_parallel: bool = False):
+    cfg = model.cfg
+    pspecs = model.param_specs()
+    ospecs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+    bspecs = batch_specs(cfg, shape, mesh)
+    p_sh, o_sh, b_sh = _ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)
+    metric_sh = NamedSharding(mesh, P())
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch, remat=remat, moe_dispatch=moe_dispatch,
+                              attn_impl=attn_impl, use_kernel=use_kernel,
+                              scan_chunk=scan_chunk, seq_parallel=seq_parallel)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        lr = warmup_cosine(opt_state.step, peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_opt, {"loss": metrics["loss"],
+                                     "final_ce": metrics["final_ce"]}
+
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh,
+                       {"loss": metric_sh, "final_ce": metric_sh}),
+        donate_argnums=(0, 1),
+    )
+
+    def abstract_inputs():
+        params = model.abstract_params()
+        opt = jax.eval_shape(partial(adamw_init, moment_dtype=moment_dtype), params)
+        batch = model.make_inputs(shape, abstract=True)
+        return params, opt, batch
+
+    return jitted, abstract_inputs
+
+
+# ----------------------------------------------------------------------------
+# prefill
+# ----------------------------------------------------------------------------
+
+def make_prefill_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
+                      attn_impl: str = "auto", moe_dispatch: str = "einsum",
+                      use_kernel: bool = False):
+    cfg = model.cfg
+    pspecs = model.param_specs()
+    bspecs = batch_specs(cfg, shape, mesh)
+    baxes, saxes = cache_sharding_axes(shape, mesh)
+    cspecs = model.cache_specs(batch_axes=baxes, seq_axes=saxes)
+    p_sh, b_sh, c_sh = _ns(mesh, pspecs), _ns(mesh, bspecs), _ns(mesh, cspecs)
+    h_sh = NamedSharding(mesh, P(None if baxes is None else baxes, None, None))
+
+    def prefill_step(params, batch):
+        cache = model.init_cache(shape.global_batch, shape.seq_len,
+                                 enc_len=shape.seq_len)
+        h, cache = model.prefill(params, batch["tokens"], cache,
+                                 frames=batch.get("frames"),
+                                 prefix_emb=batch.get("prefix_emb"),
+                                 attn_impl=attn_impl,
+                                 moe_dispatch=moe_dispatch,
+                                 use_kernel=use_kernel)
+        return h, cache
+
+    jitted = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(h_sh, c_sh))
+
+    def abstract_inputs():
+        return model.abstract_params(), model.make_inputs(shape, abstract=True)
+
+    return jitted, abstract_inputs
+
+
+# ----------------------------------------------------------------------------
+# decode (serve_step)
+# ----------------------------------------------------------------------------
+
+def make_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig, *,
+                    exit_point: Optional[int] = None,
+                    with_exit_confidence: bool = False,
+                    use_exit_kernel: bool = False,
+                    moe_dispatch: str = "einsum", use_kernel: bool = False,
+                    kv_quant: bool = False):
+    """One-token decode against a seq_len cache (the paper's serving step;
+    ``exit_point`` compiles the right-sized variant)."""
+    cfg = model.cfg
+    pspecs = model.param_specs()
+    bspecs = batch_specs(cfg, shape, mesh)
+    baxes, saxes = cache_sharding_axes(shape, mesh)
+    cspecs = model.cache_specs(batch_axes=baxes, seq_axes=saxes, quant=kv_quant)
+    p_sh, b_sh, c_sh = _ns(mesh, pspecs), _ns(mesh, bspecs), _ns(mesh, cspecs)
+    tok_sh = NamedSharding(mesh, P(baxes, None))
+
+    def serve_step(params, cache, batch):
+        h, new_cache, confs = model.decode_step(
+            params, cache, batch["tokens"], batch["pos"],
+            exit_point=exit_point, moe_dispatch=moe_dispatch,
+            with_exit_confidence=with_exit_confidence,
+            use_exit_kernel=use_exit_kernel, use_kernel=use_kernel)
+        logits = model.logits(params, h)
+        token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return token, new_cache
+
+    jitted = jax.jit(serve_step, in_shardings=(p_sh, c_sh, b_sh),
+                     out_shardings=(tok_sh, c_sh), donate_argnums=(1,))
+
+    def abstract_inputs():
+        params = model.abstract_params()
+        cache = jax.eval_shape(lambda: model.init_cache(
+            shape.global_batch, shape.seq_len, enc_len=shape.seq_len,
+            quant=kv_quant))
+        batch = model.make_inputs(shape, abstract=True)
+        return params, cache, batch
+
+    return jitted, abstract_inputs
+
+
+def make_step(model: Model, mesh: Mesh, shape: ShapeConfig, **kw):
+    if shape.kind == "train":
+        return make_train_step(model, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(model, mesh, shape, **kw)
+    return make_serve_step(model, mesh, shape, **kw)

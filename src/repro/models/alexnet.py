@@ -1,0 +1,259 @@
+"""Branchy AlexNet — the paper's prototype (Fig. 4), CIFAR-10 scale, pure JAX.
+
+The model is expressed as an explicit *layer graph*: a main branch of 22
+layers plus four side branches, so that branch ``i`` (exit point ``i``) has
+N_i layers = 12, 16, 19, 20, 22 — matching Sec. V-A.  Layer kinds are exactly
+the paper's Table-I types (conv / relu / lrn / pooling / dropout / fc), and
+every layer exposes the Table-I regression features plus its output size —
+the inputs of the Edgent partitioner.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BranchyAlexNetConfig:
+    name: str = "branchy-alexnet"
+    num_classes: int = 10
+    image_size: int = 32
+    channels: int = 3
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    kind: str                    # conv | relu | lrn | pool | dropout | fc
+    out_ch: int = 0              # conv filters / fc out features
+    filt: int = 0                # conv/pool window
+    stride: int = 1
+    drop_rate: float = 0.5
+
+
+def _main_branch(cfg: BranchyAlexNetConfig) -> List[LayerSpec]:
+    return [
+        LayerSpec("conv1", "conv", out_ch=32, filt=5, stride=1),
+        LayerSpec("relu1", "relu"),
+        LayerSpec("lrn1", "lrn"),
+        LayerSpec("pool1", "pool", filt=3, stride=2),
+        LayerSpec("conv2", "conv", out_ch=64, filt=5, stride=1),
+        LayerSpec("relu2", "relu"),
+        LayerSpec("lrn2", "lrn"),
+        LayerSpec("pool2", "pool", filt=3, stride=2),
+        LayerSpec("conv3", "conv", out_ch=96, filt=3, stride=1),
+        LayerSpec("relu3", "relu"),
+        LayerSpec("conv4", "conv", out_ch=96, filt=3, stride=1),
+        LayerSpec("relu4", "relu"),
+        LayerSpec("conv5", "conv", out_ch=64, filt=3, stride=1),
+        LayerSpec("relu5", "relu"),
+        LayerSpec("pool5", "pool", filt=3, stride=2),
+        LayerSpec("fc1", "fc", out_ch=256),
+        LayerSpec("relu6", "relu"),
+        LayerSpec("drop1", "dropout"),
+        LayerSpec("fc2", "fc", out_ch=128),
+        LayerSpec("relu7", "relu"),
+        LayerSpec("drop2", "dropout"),
+        LayerSpec("fc3", "fc", out_ch=10),
+    ]
+
+
+def _side_branches(cfg) -> List[Tuple[int, List[LayerSpec]]]:
+    """(prefix length into main, branch layers).  Branch lengths:
+    8+4=12, 10+6=16, 15+4=19, 18+2=20 — plus the 22-layer main = exit 5."""
+    c = cfg.num_classes
+    return [
+        (8, [LayerSpec("b1_conv", "conv", out_ch=32, filt=3),
+             LayerSpec("b1_relu", "relu"),
+             LayerSpec("b1_pool", "pool", filt=3, stride=2),
+             LayerSpec("b1_fc", "fc", out_ch=c)]),
+        (10, [LayerSpec("b2_conv", "conv", out_ch=32, filt=3),
+              LayerSpec("b2_relu", "relu"),
+              LayerSpec("b2_pool", "pool", filt=3, stride=2),
+              LayerSpec("b2_fc1", "fc", out_ch=64),
+              LayerSpec("b2_relu2", "relu"),
+              LayerSpec("b2_fc2", "fc", out_ch=c)]),
+        (15, [LayerSpec("b3_fc1", "fc", out_ch=128),
+              LayerSpec("b3_relu", "relu"),
+              LayerSpec("b3_drop", "dropout"),
+              LayerSpec("b3_fc2", "fc", out_ch=c)]),
+        (18, [LayerSpec("b4_fc1", "fc", out_ch=32),
+              LayerSpec("b4_fc2", "fc", out_ch=c)]),
+    ]
+
+
+# ----------------------------------------------------------------------------
+# single-layer semantics
+# ----------------------------------------------------------------------------
+
+def layer_out_shape(spec: LayerSpec, in_shape):
+    """in_shape excl. batch: (H, W, C) or (F,)."""
+    if spec.kind == "conv":
+        h, w, _ = in_shape
+        return (h // spec.stride, w // spec.stride, spec.out_ch)
+    if spec.kind == "pool":
+        h, w, c = in_shape
+        return (math.ceil(h / spec.stride), math.ceil(w / spec.stride), c)
+    if spec.kind == "fc":
+        return (spec.out_ch,)
+    return tuple(in_shape)
+
+
+def layer_features(spec: LayerSpec, in_shape) -> Dict[str, float]:
+    """Table-I independent variables for the latency regression models."""
+    in_size = float(np.prod(in_shape))
+    out_size = float(np.prod(layer_out_shape(spec, in_shape)))
+    if spec.kind == "conv":
+        return {"in_maps": float(in_shape[-1]),
+                "comp": (spec.filt / spec.stride) ** 2 * spec.out_ch,
+                "in_size": in_size}
+    if spec.kind in ("relu", "lrn", "dropout"):
+        return {"in_size": in_size}
+    if spec.kind == "pool":
+        return {"in_size": in_size, "out_size": out_size}
+    if spec.kind == "fc":
+        return {"in_size": in_size, "out_size": out_size}
+    raise ValueError(spec.kind)
+
+
+def init_layer(spec: LayerSpec, key, in_shape, dtype=jnp.float32):
+    if spec.kind == "conv":
+        cin = in_shape[-1]
+        w = jax.random.normal(key, (spec.filt, spec.filt, cin, spec.out_ch), dtype)
+        w = w / math.sqrt(spec.filt * spec.filt * cin)
+        return {"w": w, "b": jnp.zeros((spec.out_ch,), dtype)}
+    if spec.kind == "fc":
+        fin = int(np.prod(in_shape))
+        w = jax.random.normal(key, (fin, spec.out_ch), dtype) / math.sqrt(fin)
+        return {"w": w, "b": jnp.zeros((spec.out_ch,), dtype)}
+    return {}
+
+
+def apply_layer(spec: LayerSpec, p, x, *, train=False, rng=None):
+    """x: [B, H, W, C] or [B, F]."""
+    if spec.kind == "conv":
+        out = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(spec.stride, spec.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return out + p["b"]
+    if spec.kind == "relu":
+        return jax.nn.relu(x)
+    if spec.kind == "lrn":
+        # local response normalization across channels, window 5
+        sq = jnp.square(x)
+        win = 5
+        pad = win // 2
+        summed = sum(
+            jnp.pad(sq, [(0, 0)] * (x.ndim - 1) + [(pad, pad)])[..., i : i + x.shape[-1]]
+            for i in range(win))
+        return x / jnp.power(2.0 + 1e-4 * summed, 0.75)
+    if spec.kind == "pool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max,
+            (1, spec.filt, spec.filt, 1), (1, spec.stride, spec.stride, 1), "SAME")
+    if spec.kind == "dropout":
+        if not train:
+            return x
+        keep = 1.0 - spec.drop_rate
+        mask = jax.random.bernoulli(rng, keep, x.shape)
+        return jnp.where(mask, x / keep, 0.0)
+    if spec.kind == "fc":
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        return x @ p["w"] + p["b"]
+    raise ValueError(spec.kind)
+
+
+# ----------------------------------------------------------------------------
+# model
+# ----------------------------------------------------------------------------
+
+class BranchyAlexNet:
+    """Five-exit branchy AlexNet with an explicit per-branch layer list."""
+
+    def __init__(self, cfg: BranchyAlexNetConfig):
+        self.cfg = cfg
+        self.main = _main_branch(cfg)
+        self.sides = _side_branches(cfg)
+        self.num_exits = len(self.sides) + 1  # 5
+
+    # -- structure ---------------------------------------------------------
+    def branch_layers(self, exit_idx: int) -> List[LayerSpec]:
+        """Full layer list of branch `exit_idx` (1-based, paper numbering:
+        exit 1 shortest ... exit 5 = main)."""
+        if exit_idx == self.num_exits:
+            return list(self.main)
+        prefix, side = self.sides[exit_idx - 1]
+        return list(self.main[:prefix]) + list(side)
+
+    def branch_shapes(self, exit_idx: int):
+        """Per-layer (in_shape, out_shape) excl. batch for branch."""
+        shape = (self.cfg.image_size, self.cfg.image_size, self.cfg.channels)
+        out = []
+        for spec in self.branch_layers(exit_idx):
+            o = layer_out_shape(spec, shape)
+            out.append((shape, o))
+            shape = o
+        return out
+
+    # -- params ------------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        params = {}
+        shape = (self.cfg.image_size, self.cfg.image_size, self.cfg.channels)
+        shapes = {}
+        for spec in self.main:
+            key, k = jax.random.split(key)
+            params[spec.name] = init_layer(spec, k, shape, dtype)
+            shapes[spec.name] = shape
+            shape = layer_out_shape(spec, shape)
+        for prefix, side in self.sides:
+            shape = (self.cfg.image_size, self.cfg.image_size, self.cfg.channels)
+            for spec in self.main[:prefix]:
+                shape = layer_out_shape(spec, shape)
+            for spec in side:
+                key, k = jax.random.split(key)
+                params[spec.name] = init_layer(spec, k, shape, dtype)
+                shape = layer_out_shape(spec, shape)
+        return params
+
+    # -- execution ---------------------------------------------------------
+    def run_layers(self, params, x, layer_list, lo=0, hi=None, *, train=False,
+                   rng=None):
+        hi = len(layer_list) if hi is None else hi
+        for spec in layer_list[lo:hi]:
+            if rng is not None:
+                rng, sub = jax.random.split(rng)
+            else:
+                sub = None
+            x = apply_layer(spec, params.get(spec.name, {}), x, train=train, rng=sub)
+        return x
+
+    def forward_exit(self, params, x, exit_idx: int, *, train=False, rng=None):
+        return self.run_layers(params, x, self.branch_layers(exit_idx),
+                               train=train, rng=rng)
+
+    def forward_all(self, params, x, *, train=False, rng=None):
+        """Logits at every exit (BranchyNet joint training)."""
+        return [self.forward_exit(params, x, i + 1, train=train,
+                                  rng=None if rng is None else jax.random.fold_in(rng, i))
+                for i in range(self.num_exits)]
+
+    def loss(self, params, batch, rng, weights=None):
+        """Joint weighted CE over all exits."""
+        x, y = batch
+        logits = self.forward_all(params, x, train=True, rng=rng)
+        w = weights or [1.0] * self.num_exits
+        losses = []
+        for lg in logits:
+            lp = jax.nn.log_softmax(lg)
+            losses.append(-jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=1)))
+        return sum(wi * li for wi, li in zip(w, losses)) / sum(w)
+
+    def accuracy(self, params, x, y, exit_idx: int):
+        logits = self.forward_exit(params, x, exit_idx)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))

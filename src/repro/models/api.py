@@ -1,0 +1,222 @@
+"""Unified model facade: one entry point per family, shared loss/step logic.
+
+``Model(cfg)`` dispatches to the family stack (transformer / ssm_stack /
+encdec) and exposes:
+
+    init_params / abstract_params / param_specs
+    loss(params, batch, ...)            joint multi-exit CE (BranchyNet)
+    prefill / decode_step / init_cache / cache_specs
+    make_inputs(shape)                  concrete or abstract batch
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import encdec, ssm_stack, transformer
+from repro.models.encdec import AUDIO_DIM
+from repro.models.transformer import VIS_DIM
+
+EXIT_LOSS_WEIGHT = 0.3  # BranchyNet-style joint loss: side exits weighted
+
+
+def _stack(cfg: ModelConfig):
+    if cfg.family in ("ssm", "hybrid"):
+        return ssm_stack
+    if cfg.is_encdec:
+        return encdec
+    return transformer
+
+
+def softmax_xent(hidden, embed_table, labels, mask=None, chunk: int = 512):
+    """CE from hidden states against tied-embedding logits.
+
+    The [B,S,V] logits are never materialized whole: the sequence is processed
+    in ``chunk``-sized slices (lax.scan) and each slice is checkpointed, so
+    peak transient is [B, chunk, V_shard] — the memory-side twin of the fused
+    exit-head kernel (EXPERIMENTS.md §Perf)."""
+
+    @jax.checkpoint
+    def _ce(h, lab):
+        logits = jnp.einsum("bsd,vd->bsv", h, embed_table).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return lse - ll
+
+    B, S, D = hidden.shape
+    if chunk and S > chunk and S % chunk == 0:
+        nc = S // chunk
+        hs = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+        ms = (mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+              if mask is not None else None)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            if ms is not None:
+                h_c, l_c, m_c = xs
+                ce = _ce(h_c, l_c)
+                return (tot + jnp.sum(ce * m_c), cnt + jnp.sum(m_c)), None
+            h_c, l_c = xs
+            ce = _ce(h_c, l_c)
+            return (tot + jnp.sum(ce), cnt + ce.size), None
+
+        xs = (hs, ls, ms) if ms is not None else (hs, ls)
+        (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                            jnp.zeros((), jnp.float32)), xs)
+        return tot / jnp.maximum(cnt, 1.0)
+    ce = _ce(hidden, labels)
+    if mask is not None:
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(ce)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.stack = _stack(cfg)
+
+    # ------------------------------------------------------------------ params
+    def init_params(self, key, dtype=jnp.bfloat16):
+        return self.stack.init_params(self.cfg, key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return self.stack.abstract_params(self.cfg, dtype)
+
+    def param_specs(self):
+        return self.stack.param_specs(self.cfg)
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.stack.segment_lengths(self.cfg))
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch, *, remat=True, moe_dispatch="einsum",
+             attn_impl="auto", use_kernel=False, scan_chunk=16,
+             seq_parallel=False):
+        """Joint multi-exit next-token CE.  batch keys: tokens [B,S]
+        (+frames for enc-dec, +prefix_emb for vlm)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+        kw: Dict[str, Any] = dict(remat=remat, attn_impl=attn_impl)
+        if cfg.is_encdec:
+            outs, aux = self.stack.forward(cfg, params, inputs, batch["frames"], **kw)
+        elif cfg.family in ("ssm", "hybrid"):
+            outs, aux = self.stack.forward(cfg, params, inputs,
+                                           use_kernel=use_kernel,
+                                           scan_chunk=scan_chunk, **kw)
+        else:
+            outs, aux = self.stack.forward(cfg, params, inputs,
+                                           prefix_emb=batch.get("prefix_emb"),
+                                           moe_dispatch=moe_dispatch,
+                                           seq_parallel=seq_parallel, **kw)
+        P = cfg.num_prefix_tokens if (cfg.frontend == "vision"
+                                      and batch.get("prefix_emb") is not None) else 0
+        losses = []
+        for i, (si, h) in enumerate(outs):
+            if P:
+                h = h[:, P:, :]
+            is_final = i == len(outs) - 1
+            w = 1.0 if is_final else EXIT_LOSS_WEIGHT
+            losses.append((w, softmax_xent(h, params["embed"], labels)))
+        total = sum(w * l for w, l in losses) / sum(w for w, _ in losses)
+        total = total + 0.01 * aux
+        metrics = {"loss": total, "aux": aux,
+                   "final_ce": losses[-1][1],
+                   "exit_ce": jnp.stack([l for _, l in losses])}
+        return total, metrics
+
+    # ------------------------------------------------------------------ serving
+    def init_cache(self, batch, max_seq, dtype=jnp.bfloat16, enc_len=None,
+                   quant=False):
+        if self.cfg.is_encdec:
+            return encdec.init_cache(self.cfg, batch, max_seq,
+                                     enc_len or max_seq, dtype)
+        if quant and self.stack is transformer:
+            return transformer.init_cache(self.cfg, batch, max_seq, dtype,
+                                          quant=True)
+        return self.stack.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def cache_specs(self, batch_axes="data", seq_axes="model", quant=False):
+        if quant and self.stack is transformer:
+            return transformer.cache_specs(self.cfg, batch_axes, seq_axes,
+                                           quant=True)
+        return self.stack.cache_specs(self.cfg, batch_axes, seq_axes)
+
+    def prefill(self, params, tokens, cache, *, frames=None, prefix_emb=None,
+                attn_impl="auto", moe_dispatch="einsum", use_kernel=False):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.prefill(cfg, params, tokens, cache, frames,
+                                  attn_impl=attn_impl)
+        if cfg.family in ("ssm", "hybrid"):
+            return ssm_stack.prefill(cfg, params, tokens, cache,
+                                     use_kernel=use_kernel, attn_impl=attn_impl)
+        return transformer.prefill(cfg, params, tokens, cache,
+                                   prefix_emb=prefix_emb, attn_impl=attn_impl,
+                                   moe_dispatch=moe_dispatch)
+
+    def decode_step(self, params, cache, tokens, pos, *, exit_point=None,
+                    moe_dispatch="einsum", with_exit_confidence=False,
+                    use_exit_kernel=False, use_kernel=False):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return encdec.decode_step(cfg, params, cache, tokens, pos,
+                                      exit_point=exit_point)
+        if cfg.family in ("ssm", "hybrid"):
+            return ssm_stack.decode_step(cfg, params, cache, tokens, pos,
+                                         exit_point=exit_point,
+                                         use_kernel=use_kernel)
+        return transformer.decode_step(cfg, params, cache, tokens, pos,
+                                       exit_point=exit_point,
+                                       moe_dispatch=moe_dispatch,
+                                       with_exit_confidence=with_exit_confidence,
+                                       use_exit_kernel=use_exit_kernel)
+
+    def logits(self, params, hidden):
+        return jnp.einsum("bsd,vd->bsv", hidden, params["embed"])
+
+    # ------------------------------------------------------------------ inputs
+    def make_inputs(self, shape: ShapeConfig, *, abstract=False, rng=None):
+        """Batch pytree for a shape cell — ShapeDtypeStruct when abstract
+        (the dry-run path: no allocation)."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+
+        def arr(shp, dtype, maxval=None):
+            if abstract:
+                return jax.ShapeDtypeStruct(shp, dtype)
+            if dtype == jnp.int32:
+                return jax.random.randint(rng, shp, 0, maxval or cfg.vocab_size,
+                                          dtype=jnp.int32)
+            return jax.random.normal(rng, shp, dtype)
+
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                return {"tokens": arr((B, S + 1), jnp.int32),
+                        "frames": arr((B, S, AUDIO_DIM), jnp.bfloat16)}
+            if cfg.frontend == "vision":
+                t = S - cfg.num_prefix_tokens
+                return {"tokens": arr((B, t + 1), jnp.int32),
+                        "prefix_emb": arr((B, cfg.num_prefix_tokens, VIS_DIM),
+                                          jnp.bfloat16)}
+            return {"tokens": arr((B, S + 1), jnp.int32)}
+        if shape.kind == "prefill":
+            out = {"tokens": arr((B, S), jnp.int32)}
+            if cfg.is_encdec:
+                out["tokens"] = arr((B, S), jnp.int32)
+                out["frames"] = arr((B, S, AUDIO_DIM), jnp.bfloat16)
+            elif cfg.frontend == "vision":
+                out["tokens"] = arr((B, S - cfg.num_prefix_tokens), jnp.int32)
+                out["prefix_emb"] = arr((B, cfg.num_prefix_tokens, VIS_DIM),
+                                        jnp.bfloat16)
+            return out
+        # decode: one new token against a seq_len cache
+        return {"tokens": arr((B, 1), jnp.int32),
+                "pos": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                        else jnp.asarray(S - 1, jnp.int32))}

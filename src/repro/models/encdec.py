@@ -1,0 +1,264 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Encoder: stack of non-causal dense blocks over precomputed audio-frame
+embeddings (the modality frontend is a STUB per the assignment —
+``input_specs`` feeds frame embeddings directly).
+
+Decoder: causal self-attention + cross-attention + FFN; early-exit heads on
+decoder segments only (DESIGN.md §4).  Cross K/V are precomputed once from
+the encoder memory at prefill and carried in the cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+AUDIO_DIM = 1024  # stub frontend embedding width (== d_model for seamless)
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+
+def _init_enc_unit(key, cfg, dtype, n):
+    k1, k2 = jax.random.split(key)
+    return {"attn": L.init_attn(k1, cfg, dtype, stack=n),
+            "ffn": L.init_ffn(k2, cfg, dtype, stack=n)}
+
+
+def _init_dec_unit(key, cfg, dtype, n):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"attn": L.init_attn(k1, cfg, dtype, stack=n),
+            "xattn": L.init_attn(k2, cfg, dtype, stack=n),
+            "ffn": L.init_ffn(k3, cfg, dtype, stack=n)}
+
+
+def _attn_shard_flags(cfg):
+    from repro.config import MODEL_AXIS_SIZE
+    return (cfg.padded_heads % MODEL_AXIS_SIZE == 0,
+            cfg.num_kv_heads % MODEL_AXIS_SIZE == 0)
+
+
+def _dec_spec(cfg):
+    qs, ks = _attn_shard_flags(cfg)
+    sa = L.spec_attn(True, q_shard=qs, kv_shard=ks)
+    return {"attn": sa, "xattn": sa, "ffn": L.spec_ffn(True)}
+
+
+def segment_lengths(cfg: ModelConfig):
+    """Decoder segments (exits between them)."""
+    L_ = cfg.num_layers
+    bounds = []
+    for li in cfg.exit_layer_indices():
+        b = min(max(1, li), L_ - 1)
+        if b not in bounds:
+            bounds.append(b)
+    edges = [0] + sorted(bounds) + [L_]
+    return [b - a for a, b in zip(edges[:-1], edges[1:])]
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    segs = segment_lengths(cfg)
+    keys = jax.random.split(key, len(segs) + 4)
+    params = {
+        "embed": L.init_embed(keys[0], cfg, dtype),
+        "audio_proj": L.dense_init(keys[1], (AUDIO_DIM, cfg.d_model), dtype, AUDIO_DIM),
+        "encoder": _init_enc_unit(keys[2], cfg, dtype, cfg.num_encoder_layers),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "segments": tuple(_init_dec_unit(keys[3 + i], cfg, dtype, n)
+                          for i, n in enumerate(segs)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.num_exits:
+        params["exit_norms"] = jnp.ones((len(segs) - 1, cfg.d_model), dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    segs = segment_lengths(cfg)
+    specs = {
+        "embed": L.spec_embed(),
+        "audio_proj": P(None, "data"),
+        "encoder": {"attn": L.spec_attn(True, *_attn_shard_flags(cfg)),
+                    "ffn": L.spec_ffn(True)},
+        "enc_norm": P(None),
+        "segments": tuple(_dec_spec(cfg) for _ in segs),
+        "final_norm": P(None),
+    }
+    if cfg.num_exits:
+        specs["exit_norms"] = P(None, None)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+# ----------------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, params, frames, *, attn_impl="auto", remat=False):
+    """frames: [B, S_enc, AUDIO_DIM] stub embeddings -> [B, S_enc, D]."""
+    x = frames.astype(params["audio_proj"].dtype) @ params["audio_proj"]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, lp):
+        x = carry
+        a, _ = L.attention(lp["attn"], cfg, x, positions, causal=False,
+                           impl=attn_impl)
+        x = x + a
+        x = x + L.ffn(lp["ffn"], cfg, x)
+        return x, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(cfg, lp_x, memory):
+    """Precompute cross-attention K/V for one stacked segment: memory
+    [B,T,D] -> k/v [n, B, T, KV, hd]."""
+    B, T, _ = memory.shape
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+
+    def one(lp):
+        mn = L.rms_norm(memory, lp["ln"], cfg.norm_eps)
+        k = (mn @ lp["wk"]).reshape(B, T, kvh, hd)
+        v = (mn @ lp["wv"]).reshape(B, T, kvh, hd)
+        return k, v
+
+    return jax.vmap(one)(lp_x)
+
+
+def _dec_segment(cfg, segp, x, positions, cross_k, cross_v, *, attn_impl="auto",
+                 seg_cache=None, cache_pos=None, remat=False, prefill_mode=False):
+    def body(carry, xs):
+        x = carry
+        if seg_cache is None:
+            lp, ck, cv = xs
+            kv = None
+        else:
+            lp, ck, cv, kv = xs
+        a, nkv = L.attention(lp["attn"], cfg, x, positions,
+                             kv_cache=None if kv is None else (kv["k"], kv["v"]),
+                             cache_pos=cache_pos, impl=attn_impl,
+                             prefill_mode=prefill_mode)
+        x = x + a
+        xa, _ = L.attention(lp["xattn"], cfg, x, positions, cross_kv=(ck, cv),
+                            impl=attn_impl)
+        x = x + xa
+        x = x + L.ffn(lp["ffn"], cfg, x)
+        return x, (None if nkv is None else {"k": nkv[0], "v": nkv[1]})
+
+    fn = jax.checkpoint(body) if remat else body
+    xs = (segp, cross_k, cross_v) if seg_cache is None else (segp, cross_k, cross_v, seg_cache)
+    x, new_cache = jax.lax.scan(fn, x, xs)
+    return x, new_cache
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, *,
+            exit_point: Optional[int] = None, attn_impl="auto", remat=False,
+            collect_exits=True, **_):
+    """Training forward: encoder over frames + teacher-forced decoder.
+    Returns ([(seg_idx, normed_hidden)], aux=0)."""
+    memory = encode(cfg, params, frames, attn_impl=attn_impl, remat=remat)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    segs = segment_lengths(cfg)
+    n_seg = len(segs) if exit_point is None else exit_point + 1
+    outs = []
+    for si in range(n_seg):
+        ck, cv = _cross_kv(cfg, params["segments"][si]["xattn"], memory)
+        x, _ = _dec_segment(cfg, params["segments"][si], x, positions, ck, cv,
+                            attn_impl=attn_impl, remat=remat)
+        is_last = si == n_seg - 1
+        if not is_last and cfg.num_exits and collect_exits:
+            outs.append((si, L.rms_norm(x, params["exit_norms"][si], cfg.norm_eps)))
+        if is_last:
+            norm = params["final_norm"] if exit_point in (None, len(segs) - 1) \
+                else params["exit_norms"][si]
+            outs.append((si, L.rms_norm(x, norm, cfg.norm_eps)))
+    return outs, 0.0
+
+
+# ----------------------------------------------------------------------------
+# cache / decode
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    segs = segment_lengths(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    cache = {"self": [], "cross_k": [], "cross_v": []}
+    for n in segs:
+        cache["self"].append({"k": jnp.zeros((n, batch, max_seq, kvh, hd), dtype),
+                              "v": jnp.zeros((n, batch, max_seq, kvh, hd), dtype)})
+        cache["cross_k"].append(jnp.zeros((n, batch, enc_len, kvh, hd), dtype))
+        cache["cross_v"].append(jnp.zeros((n, batch, enc_len, kvh, hd), dtype))
+    cache["self"] = tuple(cache["self"])
+    cache["cross_k"] = tuple(cache["cross_k"])
+    cache["cross_v"] = tuple(cache["cross_v"])
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch_axes, seq_axes="model"):
+    segs = segment_lengths(cfg)
+    self_spec = P(None, batch_axes, seq_axes, None, None)
+    return {
+        "self": tuple({"k": self_spec, "v": self_spec} for _ in segs),
+        "cross_k": tuple(self_spec for _ in segs),
+        "cross_v": tuple(self_spec for _ in segs),
+    }
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, frames, *,
+            attn_impl="auto", **_):
+    """Encode + teacher-forced decoder prefill; fills self+cross caches."""
+    memory = encode(cfg, params, frames, attn_impl=attn_impl)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    new_cache = {"self": [], "cross_k": [], "cross_v": []}
+    for si, segp in enumerate(params["segments"]):
+        ck, cv = _cross_kv(cfg, segp["xattn"], memory)
+        x, nc = _dec_segment(cfg, segp, x, positions, ck, cv,
+                             attn_impl=attn_impl, seg_cache=cache["self"][si],
+                             cache_pos=0, prefill_mode=True)
+        new_cache["self"].append(nc)
+        new_cache["cross_k"].append(ck.astype(cache["cross_k"][si].dtype))
+        new_cache["cross_v"].append(cv.astype(cache["cross_v"][si].dtype))
+    for k in ("self", "cross_k", "cross_v"):
+        new_cache[k] = tuple(new_cache[k])
+    h = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return h, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                exit_point: Optional[int] = None, **_):
+    """One decoder step against filled self/cross caches."""
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.reshape(pos, (1, 1)), (B, 1))
+    segs = segment_lengths(cfg)
+    n_seg = len(segs) if exit_point is None else exit_point + 1
+    new_self = list(cache["self"])
+    for si in range(n_seg):
+        x, nc = _dec_segment(cfg, params["segments"][si], x, positions,
+                             cache["cross_k"][si], cache["cross_v"][si],
+                             seg_cache=cache["self"][si], cache_pos=pos)
+        new_self[si] = nc
+    norm = params["final_norm"] if exit_point in (None, len(segs) - 1) \
+        else params["exit_norms"][n_seg - 1]
+    h = L.rms_norm(x, norm, cfg.norm_eps)
+    new_cache = dict(cache)
+    new_cache["self"] = tuple(new_self)
+    return h, new_cache, []

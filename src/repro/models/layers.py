@@ -1,0 +1,454 @@
+"""Shared model primitives: norms, RoPE, GQA attention (+KV cache), SwiGLU.
+
+Pure functions over param pytrees.  Every ``init_*`` has a matching
+``spec_*`` returning a :class:`jax.sharding.PartitionSpec` tree using the
+logical mesh axes ``("data", "model")`` — FSDP on ``data``, tensor parallel on
+``model``.  The ``pod`` axis (multi-pod) only ever shards the batch.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+
+# ----------------------------------------------------------------------------
+# init helpers
+# ----------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rms_norm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def init_rmsnorm(d, dtype):
+    return jnp.ones((d,), dtype)
+
+
+# ----------------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention
+# ----------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig, dtype, stack: int = 0):
+    d, hd = cfg.d_model, cfg.hd
+    hp, kv = cfg.padded_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    pre = (stack,) if stack else ()
+
+    def mk(k, shape, fan):
+        return dense_init(k, pre + shape, dtype, fan_in=fan)
+
+    return {
+        "wq": mk(ks[0], (d, hp * hd), d),
+        "wk": mk(ks[1], (d, kv * hd), d),
+        "wv": mk(ks[2], (d, kv * hd), d),
+        "wo": mk(ks[3], (hp * hd, d), hp * hd),
+        "ln": jnp.ones(pre + (d,), dtype),
+    }
+
+
+def spec_attn(stack: bool = False, q_shard: bool = True, kv_shard: bool = True):
+    """Sharding for attention projections.
+
+    ``q_shard`` / ``kv_shard`` must be False when the respective head count
+    does not divide the 16-way ``model`` axis: naively sharding head*hd
+    splits individual heads across devices, which turns every QK^T
+    contraction into a partial-sum all-reduce of the *score blocks* — the
+    dominant collective of the naive lowering (EXPERIMENTS.md §Perf,
+    iteration A2).  Replicated K/V is cheap under GQA.
+    """
+    pre = (None,) if stack else ()
+    qs = P(*pre, "data", "model") if q_shard else P(*pre, "data", None)
+    kvs = P(*pre, "data", "model") if kv_shard else P(*pre, "data", None)
+    return {
+        "wq": qs,
+        "wk": kvs,
+        "wv": kvs,
+        "wo": P(*pre, "model", "data") if q_shard else P(*pre, None, "data"),
+        "ln": P(*pre, None),
+    }
+
+
+def _sdpa(q, k, v, mask_bias):
+    """q: [B,S,H,hd], k/v: [B,T,KV,hd] -> [B,S,H,hd]; f32 softmax."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd) + mask_bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_bias(S: int, T: int, offset: int = 0):
+    """[1,1,1,S,T] additive bias; position i attends to j <= i + offset."""
+    qi = jnp.arange(S)[:, None] + offset
+    kj = jnp.arange(T)[None, :]
+    return jnp.where(kj <= qi, 0.0, -1e30).astype(jnp.float32)[None, None, None]
+
+
+def flash_attention_jnp(q, k, v, *, causal=True, q_block=1024, kv_block=1024):
+    """Blocked online-softmax attention in pure jnp (lax.scan over q and kv
+    chunks) — the memory-safe default for long-context prefill/train; the
+    Pallas kernel in ``repro.kernels.flash_attention`` is its TPU-optimized
+    twin (same math, block-pruned causal grid).
+
+    q: [B,S,H,hd]; k/v: [B,T,KV,hd].  Returns [B,S,H,hd].
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    nq, nk = S // qb, T // kb
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, nq, qb, KV, G, hd)
+    kr = k.reshape(B, nk, kb, KV, hd)
+    vr = v.reshape(B, nk, kb, KV, hd)
+
+    def q_step(_, qi_q):
+        qi, qc = qi_q  # chunk idx, [B,qb,KV,G,hd]
+
+        def kv_step(carry, kj_kv):
+            m, l, acc = carry
+            kj, kc, vc = kj_kv
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = kj * kb + jnp.arange(kb)
+                s = jnp.where(kpos[None, :] <= qpos[:, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(q.dtype)  # [B,KV,G,qb,hd]
+
+    _, o = jax.lax.scan(q_step, None,
+                        (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    o = o.transpose(1, 0, 4, 2, 3, 5)  # [B,nq,qb,KV,G,hd]
+    return o.reshape(B, S, H, hd)
+
+
+def _flash_fwd_blocks(q, k, v, *, causal, q_block, kv_block):
+    """Forward flash returning (o, lse); q: [B,S,H,hd], k/v: [B,T,KV,hd]."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qb, kb = min(q_block, S), min(kv_block, T)
+    nq, nk = S // qb, T // kb
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, nq, qb, KV, G, hd)
+    kr = k.reshape(B, nk, kb, KV, hd)
+    vr = v.reshape(B, nk, kb, KV, hd)
+
+    def q_step(_, qi_q):
+        qi, qc = qi_q
+
+        def kv_step(carry, kj_kv):
+            m, l, acc = carry
+            kj, kc, vc = kj_kv
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc).astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = kj * kb + jnp.arange(kb)
+                s = jnp.where(kpos[None, :] <= qpos[:, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc).astype(jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, qb), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kr.transpose(1, 0, 2, 3, 4), vr.transpose(1, 0, 2, 3, 4)))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).astype(q.dtype)
+        return None, (out, (m + jnp.log(l)))      # [B,KV,G,qb,hd], lse [B,KV,G,qb]
+
+    _, (o, lse) = jax.lax.scan(q_step, None,
+                               (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    lse = lse.transpose(1, 0, 4, 2, 3).reshape(B, S, H)   # per q-position
+    return o, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_fused(q, k, v, causal=True, q_block=1024, kv_block=1024):
+    """Flash attention with a flash *backward* (custom_vjp): the backward
+    pass recomputes the block attention probabilities from (q, k, v, lse)
+    instead of letting autodiff save the [bq, bk] probability blocks as scan
+    residuals — the dominant HBM-traffic term of the naive lowering
+    (EXPERIMENTS.md §Perf, iteration 1)."""
+    o, _ = _flash_fwd_blocks(q, k, v, causal=causal, q_block=q_block,
+                             kv_block=kv_block)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, causal, q_block, kv_block):
+    o, lse = _flash_fwd_blocks(q, k, v, causal=causal, q_block=q_block,
+                               kv_block=kv_block)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, q_block, kv_block, res, do):
+    q, k, v, o, lse = res
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qb, kb = min(q_block, S), min(kv_block, T)
+    nq, nk = S // qb, T // kb
+    scale = 1.0 / math.sqrt(hd)
+    qr = q.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)   # [nq,B,KV,G,qb,hd]
+    dor = do.reshape(B, nq, qb, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    Dr = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    Dr = Dr.reshape(B, nq, qb, KV, G).transpose(1, 0, 3, 4, 2)          # [nq,B,KV,G,qb]
+    lser = lse.reshape(B, nq, qb, KV, G).transpose(1, 0, 3, 4, 2)
+    kr = k.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)          # [nk,B,KV,kb,hd]
+    vr = v.reshape(B, nk, kb, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    def kv_step(_, kj_kv):
+        kj, kc, vc = kj_kv                 # [B,KV,kb,hd]
+
+        def q_step(carry, qi_q):
+            dk_acc, dv_acc = carry
+            qi, qc, doc, Dc, lsec = qi_q
+            s = jnp.einsum("bkgqd,bktd->bkgqt", qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            if causal:
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = kj * kb + jnp.arange(kb)
+                s = jnp.where(kpos[None, :] <= qpos[:, None], s, -1e30)
+            p = jnp.exp(s - lsec[..., None])                    # [B,KV,G,qb,kb]
+            dv_acc = dv_acc + jnp.einsum("bkgqt,bkgqd->bktd", p,
+                                         doc.astype(jnp.float32))
+            dp = jnp.einsum("bkgqd,bktd->bkgqt", doc.astype(jnp.float32),
+                            vc.astype(jnp.float32))
+            ds = p * (dp - Dc[..., None]) * scale
+            dq_blk = jnp.einsum("bkgqt,bktd->bkgqd", ds, kc.astype(jnp.float32))
+            dk_acc = dk_acc + jnp.einsum("bkgqt,bkgqd->bktd", ds,
+                                         qc.astype(jnp.float32))
+            return (dk_acc, dv_acc), dq_blk
+
+        z = jnp.zeros((B, KV, kb, hd), jnp.float32)
+        (dk_b, dv_b), dq_blocks = jax.lax.scan(
+            q_step, (z, z), (jnp.arange(nq), qr, dor, Dr, lser))
+        return None, (dk_b, dv_b, dq_blocks)
+
+    _, (dk_all, dv_all, dq_all) = jax.lax.scan(
+        kv_step, None, (jnp.arange(nk), kr, vr))
+    # dq: sum over kv blocks; [nk,nq,B,KV,G,qb,hd] -> [B,S,H,hd]
+    dq = dq_all.sum(0).transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    dk = dk_all.transpose(1, 0, 3, 2, 4).reshape(B, T, KV, hd)
+    dv = dv_all.transpose(1, 0, 3, 2, 4).reshape(B, T, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_fused.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, causal=True,
+              kv_cache=None, cache_pos=None, cross_kv=None,
+              impl="auto", prefill_mode=False):
+    """Full/cached attention.
+
+    - training: ``kv_cache is None`` -> self attention over x.
+    - prefill: ``kv_cache`` given + ``prefill_mode=True`` — writes k/v at
+      [cache_pos, cache_pos+S) but attends within the current block only
+      (cache was empty), so the flash path applies.
+    - decode: ``kv_cache=(k,v) [B,T,KV,hd]`` and ``cache_pos`` scalar — writes
+      the new kv at ``cache_pos`` and attends to [0, cache_pos].
+    - cross attention: ``cross_kv=(k,v)`` precomputed encoder memory.
+    ``impl``: dense | flash | pallas | auto (flash when S*T is large).
+    Returns (out [B,S,D], new_cache or None).
+
+    When ``cfg.padded_heads > cfg.num_heads`` the padding query heads (added
+    so whole heads shard over the model axis) are masked to zero before the
+    output projection — zero output AND zero gradient, exact semantics.
+    """
+
+    def _mask_pad_heads(out, h):
+        if h == cfg.num_heads:
+            return out
+        gp = h // cfg.num_kv_heads
+        g = cfg.num_heads // cfg.num_kv_heads
+        mask = (jnp.arange(h) % gp) < g
+        return out * mask[None, None, :, None].astype(out.dtype)
+    B, S, _ = x.shape
+    hd, kv_h = cfg.hd, cfg.num_kv_heads
+    h = p["wq"].shape[-1] // hd           # padded head count (cfg.padded_heads)
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = (xn @ p["wq"]).reshape(B, S, h, hd)
+    new_cache = None
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    else:
+        k = (xn @ p["wk"]).reshape(B, S, kv_h, hd)
+        v = (xn @ p["wv"]).reshape(B, S, kv_h, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if kv_cache is not None and isinstance(kv_cache, dict):
+            # int8-quantized cache: per (position, kv-head) scales
+            def quant(x):
+                sc = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+                sc = jnp.maximum(sc, 1e-8)
+                q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc[..., None]),
+                             -127, 127).astype(jnp.int8)
+                return q, sc.astype(jnp.bfloat16)
+
+            k8, ks_ = quant(k)
+            v8, vs_ = quant(v)
+            upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+                buf, val.astype(buf.dtype), cache_pos, axis=1)
+            new_cache = {"k": upd(kv_cache["k"], k8), "v": upd(kv_cache["v"], v8),
+                         "k_scale": upd(kv_cache["k_scale"], ks_),
+                         "v_scale": upd(kv_cache["v_scale"], vs_)}
+            if not prefill_mode:
+                T = new_cache["k"].shape[1]
+                ck = (new_cache["k"].astype(jnp.float32) *
+                      new_cache["k_scale"].astype(jnp.float32)[..., None]).astype(q.dtype)
+                cv = (new_cache["v"].astype(jnp.float32) *
+                      new_cache["v_scale"].astype(jnp.float32)[..., None]).astype(q.dtype)
+                kj = jnp.arange(T)[None, :]
+                qi = cache_pos + jnp.arange(S)[:, None]
+                bias = jnp.where(kj <= qi, 0.0, -1e30).astype(jnp.float32)[None, None, None]
+                out = _mask_pad_heads(_sdpa(q, ck, cv, bias), h)
+                return out.reshape(B, S, h * hd) @ p["wo"], new_cache
+        elif kv_cache is not None:
+            ck, cv = kv_cache
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+            new_cache = (ck, cv)
+            if not prefill_mode:
+                # decode: attend to the filled cache
+                T = ck.shape[1]
+                kj = jnp.arange(T)[None, :]
+                qi = cache_pos + jnp.arange(S)[:, None]
+                bias = jnp.where(kj <= qi, 0.0, -1e30).astype(jnp.float32)[None, None, None]
+                out = _mask_pad_heads(
+                    _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), bias), h)
+                return out.reshape(B, S, h * hd) @ p["wo"], new_cache
+    if impl == "auto":
+        impl = "flash" if S * k.shape[1] > 1024 * 1024 else "dense"
+    blk = 1024                             # default tuned in EXPERIMENTS §Perf it.0b
+    if impl.startswith("flash@"):          # e.g. "flash@2048": block-size knob
+        blk = int(impl.split("@", 1)[1])
+        impl = "flash"
+    if impl == "pallas" and causal and S == k.shape[1]:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True)
+    elif impl == "flash":
+        out = flash_attention_fused(q, k, v, causal, blk, blk)
+    elif impl == "flash_novjp":
+        # naive-autodiff baseline: backward saves probability blocks as scan
+        # residuals (EXPERIMENTS.md §Perf baseline)
+        out = flash_attention_jnp(q, k, v, causal=causal)
+    else:
+        bias = causal_bias(S, S) if causal else 0.0
+        out = _sdpa(q, k, v, bias)
+    out = _mask_pad_heads(out, h)
+    out = out.reshape(B, S, h * hd) @ p["wo"]
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------------
+# SwiGLU FFN
+# ----------------------------------------------------------------------------
+
+def init_ffn(key, cfg: ModelConfig, dtype, stack: int = 0, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pre = (stack,) if stack else ()
+    return {
+        "wg": dense_init(ks[0], pre + (d, f), dtype, d),
+        "wu": dense_init(ks[1], pre + (d, f), dtype, d),
+        "wd": dense_init(ks[2], pre + (f, d), dtype, f),
+        "ln": jnp.ones(pre + (d,), dtype),
+    }
+
+
+def spec_ffn(stack: bool = False):
+    pre = (None,) if stack else ()
+    return {
+        "wg": P(*pre, "data", "model"),
+        "wu": P(*pre, "data", "model"),
+        "wd": P(*pre, "model", "data"),
+        "ln": P(*pre, None),
+    }
+
+
+def ffn(p, cfg: ModelConfig, x):
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    return (jax.nn.silu(xn @ p["wg"]) * (xn @ p["wu"])) @ p["wd"]
+
+
+# ----------------------------------------------------------------------------
+# Embedding / logits (tied)
+# ----------------------------------------------------------------------------
+
+def init_embed(key, cfg: ModelConfig, dtype):
+    return dense_init(key, (cfg.padded_vocab, cfg.d_model), dtype, fan_in=cfg.d_model)
+
+
+def spec_embed():
+    return P("model", "data")
+
+
+def embed(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def logits(table, x):
+    """Tied LM head: [B,S,D] @ [V,D]^T -> [B,S,V]."""
+    return jnp.einsum("bsd,vd->bsv", x, table)

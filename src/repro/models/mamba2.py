@@ -1,0 +1,124 @@
+"""Mamba-2 (SSD) block and the zamba2 hybrid pattern (arXiv:2411.15242).
+
+SSD recurrence per head (headdim ``dh=64``, state N = cfg.ssm_state):
+    a_t = exp(dt_t * A_h)    (A_h < 0, scalar per head)
+    S_t = a_t S_{t-1} + (dt_t x_t) B_t^T ;   y_t = S_t C_t + D_h x_t
+which maps onto the shared diagonal-decay scan with q=C, k=B,
+v=dt*x, per-head scalar decay broadcast over state channels.
+
+zamba2: ``num_layers`` mamba blocks; one weight-*shared* attention+FFN block
+applied every ``hybrid_attn_period`` blocks (single weight copy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.linear_scan import linear_scan
+
+DH = 64      # mamba2 head dim
+CONV_W = 4   # causal depthwise conv width
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return 2 * cfg.d_model
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // DH
+
+
+def init_layer(key, cfg: ModelConfig, dtype, stack: int = 0):
+    d = cfg.d_model
+    di, n, hm = d_inner(cfg), cfg.ssm_state, n_heads(cfg)
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones(pre + (d,), dtype),
+        # fused in_proj -> [z, x, B, C, dt]
+        "w_in": dense_init(ks[0], pre + (d, 2 * di + 2 * n + hm), dtype, d),
+        "conv": dense_init(ks[1], pre + (CONV_W, di + 2 * n), dtype, CONV_W),
+        "A_log": jnp.zeros(pre + (hm,), jnp.float32),      # A = -exp(A_log)
+        "D": jnp.ones(pre + (hm,), jnp.float32),
+        "dt_bias": jnp.zeros(pre + (hm,), jnp.float32),
+        "w_out": dense_init(ks[2], pre + (di, d), dtype, di),
+        "gn": jnp.ones(pre + (di,), dtype),
+    }
+
+
+def spec_layer(stack: bool = False):
+    pre = (None,) if stack else ()
+    return {
+        "ln": P(*pre, None),
+        # fused in_proj width (2*di + 2n + hm) is not 16-divisible: shard the
+        # d_model (input) dim instead
+        "w_in": P(*pre, "data", None),
+        "conv": P(*pre, None, "model"),
+        "A_log": P(*pre, None), "D": P(*pre, None), "dt_bias": P(*pre, None),
+        "w_out": P(*pre, "model", "data"),
+        "gn": P(*pre, "model"),
+    }
+
+
+def _split_in(cfg, h):
+    di, n, hm = d_inner(cfg), cfg.ssm_state, n_heads(cfg)
+    z, x, B_, C_, dt = jnp.split(h, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, x, B_, C_, dt
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv, width CONV_W. x: [B,S,C]; w: [CONV_W, C].
+    conv_state: [B, CONV_W-1, C] trailing context (decode)."""
+    if conv_state is not None:
+        x = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+        new_state = x[:, -(CONV_W - 1):, :]
+    else:
+        x = jnp.pad(x, ((0, 0), (CONV_W - 1, 0), (0, 0)))
+        new_state = x[:, -(CONV_W - 1):, :]
+    out = sum(x[:, i : x.shape[1] - (CONV_W - 1 - i), :] * w[i] for i in range(CONV_W))
+    return out, new_state
+
+
+def block(p, cfg: ModelConfig, x, state, conv_state=None, *, mode="auto",
+          use_kernel=False, chunk=16):
+    """x: [B,S,D]; state: [B,Hm,N,DH] f32 (k-dim=N, v-dim=DH).
+    Returns (out, new_state, new_conv_state)."""
+    B, S, D = x.shape
+    di, n, hm = d_inner(cfg), cfg.ssm_state, n_heads(cfg)
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xi, Bc, Cc, dt = _split_in(cfg, xn @ p["w_in"])
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bc, Cc = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])        # [B,S,Hm]
+    A = -jnp.exp(p["A_log"])                                           # [Hm]
+    log_w = (dt * A)[..., None]                                        # [B,S,Hm,1]
+    log_w = jnp.broadcast_to(log_w, (B, S, hm, n))                     # per-channel
+    xh = xi.reshape(B, S, hm, DH) * dt[..., None].astype(xi.dtype)     # v = dt*x
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, S, hm, n)).astype(xi.dtype)
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, S, hm, n)).astype(xi.dtype)
+    y, new_state = linear_scan(q, k, xh, log_w, state, u=None, mode=mode,
+                               use_kernel=use_kernel, chunk=chunk)     # [B,S,Hm,DH]
+    y = y + xi.reshape(B, S, hm, DH) * p["D"][:, None].astype(xi.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["gn"], cfg.norm_eps) * jax.nn.silu(z)
+    return (y @ p["w_out"]), new_state, new_conv
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    hm, n = n_heads(cfg), cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((cfg.num_layers, batch, hm, n, DH), jnp.float32),
+        "conv": jnp.zeros((cfg.num_layers, batch, CONV_W - 1, d_inner(cfg) + 2 * n), jnp.float32),
+    }
+
+
+def state_specs(batch_axes):
+    return {
+        "ssm": P(None, batch_axes, None, "model", None),
+        "conv": P(None, batch_axes, None, "model"),
+    }

@@ -1,0 +1,106 @@
+"""Top-1 Mixture-of-Experts FFN (llama4-*), GShard-style einsum dispatch.
+
+Tokens are grouped as [G, T_g] with G sharded over ``data`` and experts
+sharded over ``model`` — GSPMD lowers the dispatch/combine einsums into the
+canonical all-to-all pattern.  Capacity-factor drop policy; dense one-hot
+dispatch is the paper-era baseline, a gather-based dispatch lives in
+``moe_gather`` (perf hillclimb, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def init_moe(key, cfg: ModelConfig, dtype, stack: int = 0):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    pre = (stack,) if stack else ()
+    return {
+        "router": dense_init(ks[0], pre + (d, e), jnp.float32, d),
+        "wg": dense_init(ks[1], pre + (e, d, f), dtype, d),
+        "wu": dense_init(ks[2], pre + (e, d, f), dtype, d),
+        "wd": dense_init(ks[3], pre + (e, f, d), dtype, f),
+        "ln": jnp.ones(pre + (d,), dtype),
+    }
+
+
+def spec_moe(stack: bool = False):
+    pre = (None,) if stack else ()
+    return {
+        "router": P(*pre, "data", None),
+        "wg": P(*pre, "model", "data", None),
+        "wu": P(*pre, "model", "data", None),
+        "wd": P(*pre, "model", None, "data"),
+        "ln": P(*pre, None),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    c = int(tokens_per_group * cfg.capacity_factor * cfg.experts_per_tok / cfg.num_experts)
+    return max(4, c)
+
+
+def moe_ffn(p, cfg: ModelConfig, x, *, dispatch_mode: str = "einsum"):
+    """x: [B, S, D] -> [B, S, D]; returns (out, aux_loss)."""
+    B, S, D = x.shape
+    E = cfg.num_experts
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    g = xn.reshape(B, S, D)  # groups = batch rows
+    router_logits = jnp.einsum("gsd,de->gse", g.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(router_logits, axis=-1)            # [G,S,E]
+    expert_idx = jnp.argmax(probs, axis=-1)                   # [G,S]
+    top_p = jnp.take_along_axis(probs, expert_idx[..., None], axis=-1)[..., 0]
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.one_hot(expert_idx, E, dtype=jnp.float32), axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    C = _capacity(S, cfg)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)          # [G,S,E]
+    pos = jnp.cumsum(onehot, axis=1) * onehot                          # 1-based slot
+    slot = (pos - 1.0).max(axis=-1).astype(jnp.int32)                  # [G,S]
+    keep = (slot < C) & (pos.max(axis=-1) > 0)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * keep[..., None]
+    dispatch = onehot[..., None] * slot_oh[..., None, :]               # [G,S,E,C]
+    dispatch = dispatch.astype(x.dtype)
+    combine = dispatch * top_p[..., None, None].astype(x.dtype)
+
+    if dispatch_mode == "gather":
+        return _moe_gather(p, cfg, g, expert_idx, top_p, keep), aux
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, g)                     # a2a: data->model
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["wg"]))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["wu"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wd"])
+    out = jnp.einsum("gsec,egcd->gsd", combine, ye)                    # a2a: model->data
+    return out.reshape(B, S, D), aux
+
+
+def _moe_gather(p, cfg: ModelConfig, g, expert_idx, top_p, keep):
+    """Gather-based dispatch: sort tokens by expert, run experts on
+    contiguous slabs, scatter back.  Cuts the one-hot dispatch matmul FLOPs
+    (beyond-paper optimization; see EXPERIMENTS.md §Perf)."""
+    G, S, D = g.shape
+    E = cfg.num_experts
+    C = _capacity(S, cfg)
+    # position of each token within its expert's capacity slab
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)
+    slot = (jnp.cumsum(onehot, axis=1) * onehot).max(axis=-1) - 1      # [G,S]
+    ok = keep
+    dest = jnp.where(ok, expert_idx * C + slot, E * C)                 # overflow bucket
+    slab = jnp.zeros((G, E * C + 1, D), g.dtype)
+    slab = jax.vmap(lambda sl, d_, v: sl.at[d_].add(v))(slab, dest, g)  # scatter
+    xe = slab[:, : E * C].reshape(G, E, C, D).transpose(1, 0, 2, 3)     # [E,G,C,D]
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["wg"]))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["wu"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wd"]).transpose(1, 0, 2, 3)  # [G,E,C,D]
+    ye = ye.reshape(G, E * C, D)
+    out = jax.vmap(lambda y, d_: y[jnp.minimum(d_, E * C - 1)])(ye, dest)
+    out = out * (ok[..., None] * top_p[..., None]).astype(g.dtype)
+    return out

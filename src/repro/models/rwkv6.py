@@ -1,0 +1,129 @@
+"""RWKV-6 "Finch" — attention-free RNN with data-dependent decay
+(arXiv:2404.05892), adapted to the shared diagonal-decay linear scan.
+
+Per layer: time-mix (token shift, r/k/v/g projections, data-dependent decay
+w_t = exp(-exp(w0 + tanh(x @ A) @ B)), wkv state recurrence with bonus u) and
+channel-mix (squared-relu MLP with receptance gate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.linear_scan import linear_scan
+
+LORA_R = 64
+
+
+def init_layer(key, cfg: ModelConfig, dtype, stack: int = 0):
+    d, f = cfg.d_model, cfg.d_ff
+    pre = (stack,) if stack else ()
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": jnp.ones(pre + (d,), dtype),
+        "ln2": jnp.ones(pre + (d,), dtype),
+        "mu": 0.5 * jnp.ones(pre + (5, d), dtype),     # shift-mix for r,k,v,g,w
+        "wr": dense_init(ks[0], pre + (d, d), dtype, d),
+        "wk": dense_init(ks[1], pre + (d, d), dtype, d),
+        "wv": dense_init(ks[2], pre + (d, d), dtype, d),
+        "wg": dense_init(ks[3], pre + (d, d), dtype, d),
+        "wo": dense_init(ks[4], pre + (d, d), dtype, d),
+        "w0": -6.0 * jnp.ones(pre + (d,), jnp.float32),  # base log-log decay
+        "wA": dense_init(ks[5], pre + (d, LORA_R), dtype, d),
+        "wB": dense_init(ks[6], pre + (LORA_R, d), dtype, LORA_R),
+        "u": dense_init(ks[7], pre + (cfg.num_heads, cfg.hd), jnp.float32, cfg.hd),
+        "gn": jnp.ones(pre + (d,), dtype),
+        "cm_mu": 0.5 * jnp.ones(pre + (2, d), dtype),
+        "cm_k": dense_init(ks[8], pre + (d, f), dtype, d),
+        "cm_v": dense_init(ks[9], pre + (f, d), dtype, f),
+        "cm_r": dense_init(ks[10], pre + (d, d), dtype, d),
+    }
+
+
+def spec_layer(stack: bool = False):
+    pre = (None,) if stack else ()
+    d2 = P(*pre, "data", "model")
+    return {
+        "ln1": P(*pre, None), "ln2": P(*pre, None), "mu": P(*pre, None, None),
+        "wr": d2, "wk": d2, "wv": d2, "wg": d2,
+        "wo": P(*pre, "model", "data"),
+        "w0": P(*pre, None), "wA": P(*pre, "data", None), "wB": P(*pre, None, "data"),
+        "u": P(*pre, None, None), "gn": P(*pre, None),
+        "cm_mu": P(*pre, None, None),
+        "cm_k": d2, "cm_v": P(*pre, "model", "data"), "cm_r": P(*pre, "data", "model"),
+    }
+
+
+def _shift(x, last):
+    """Token shift: returns x_{t-1} per position; ``last`` is [B,1,D] carry
+    (previous token of the preceding chunk / step)."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def time_mix(p, cfg: ModelConfig, x, state, last, *, mode="auto", use_kernel=False,
+             chunk=16):
+    """x: [B,S,D]; state: [B,H,hd,hd] f32; last: [B,1,D] previous token.
+    Returns (out, new_state, new_last)."""
+    B, S, D = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+    xx = _shift(xn, last)
+    mu = p["mu"]
+    xr, xk, xv, xg, xw = (xn + (xx - xn) * mu[i] for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the Finch hallmark)
+    ddw = jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    log_w = -jnp.exp(jnp.clip(p["w0"] + ddw.astype(jnp.float32), -20.0, 3.0))
+    log_w = log_w.reshape(B, S, H, hd)
+    o, new_state = linear_scan(r, k, v, log_w, state, u=p["u"], mode=mode,
+                               use_kernel=use_kernel, chunk=chunk)
+    o = o.reshape(B, S, D)
+    # group norm over heads
+    og = o.reshape(B, S, H, hd)
+    og = (og - og.mean(-1, keepdims=True)) * jax.lax.rsqrt(og.var(-1, keepdims=True) + cfg.norm_eps)
+    o = og.reshape(B, S, D).astype(x.dtype) * p["gn"] * g
+    return o @ p["wo"], new_state, xn[:, -1:, :]
+
+
+def channel_mix(p, cfg: ModelConfig, x, last):
+    xn = rms_norm(x, p["ln2"], cfg.norm_eps)
+    xx = _shift(xn, last)
+    xk = xn + (xx - xn) * p["cm_mu"][0]
+    xr = xn + (xx - xn) * p["cm_mu"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (k @ p["cm_v"]), xn[:, -1:, :]
+
+
+def block(p, cfg: ModelConfig, x, state, lasts, *, mode="auto", use_kernel=False,
+          chunk=16):
+    """One RWKV layer.  ``lasts`` = (last_tm, last_cm) each [B,1,D]."""
+    tm, new_state, l1 = time_mix(p, cfg, x, state, lasts[0], mode=mode,
+                                 use_kernel=use_kernel, chunk=chunk)
+    x = x + tm
+    cm, l2 = channel_mix(p, cfg, x, lasts[1])
+    return x + cm, new_state, (l1, l2)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    """Recurrent state shipped at a partition cut (see DESIGN.md §4)."""
+    return {
+        "wkv": jnp.zeros((cfg.num_layers, batch, cfg.num_heads, cfg.hd, cfg.hd), jnp.float32),
+        "last_tm": jnp.zeros((cfg.num_layers, batch, 1, cfg.d_model), jnp.float32),
+        "last_cm": jnp.zeros((cfg.num_layers, batch, 1, cfg.d_model), jnp.float32),
+    }
+
+
+def state_specs(batch_axes):
+    # heads (40) don't divide the 16-way model axis; shard the key channel
+    # dim (64) instead — partial r.S sums all-reduce under GSPMD.
+    return {
+        "wkv": P(None, batch_axes, None, "model", None),
+        "last_tm": P(None, batch_axes, None, None),
+        "last_cm": P(None, batch_axes, None, None),
+    }

@@ -1,0 +1,297 @@
+"""Stacks for the attention-free / hybrid families.
+
+* ``ssm``    — rwkv6-3b: scan over RWKV-6 blocks; recurrent state replaces the
+  KV cache (O(1) decode — this is why long_500k runs for this family).
+* ``hybrid`` — zamba2-2.7b: Mamba-2 blocks with one weight-SHARED attention+FFN
+  block applied every ``hybrid_attn_period`` blocks.  Segments are aligned to
+  the period so the scan unit is (period x mamba blocks, shared attn).
+
+Early-exit heads sit between segments, exactly as in ``transformer.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import rwkv6 as R6
+
+
+def _round_to(x, m):
+    return max(m, int(round(x / m)) * m)
+
+
+def segment_lengths(cfg: ModelConfig):
+    unit = cfg.hybrid_attn_period if cfg.family == "hybrid" else 1
+    L_ = cfg.num_layers
+    bounds = []
+    for li in cfg.exit_layer_indices():
+        b = min(max(unit, _round_to(li, unit)), L_ - unit)
+        if b not in bounds:
+            bounds.append(b)
+    edges = [0] + sorted(bounds) + [L_]
+    return [b - a for a, b in zip(edges[:-1], edges[1:])]
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    segs = segment_lengths(cfg)
+    keys = jax.random.split(key, len(segs) + 4)
+    init_layer = R6.init_layer if cfg.family == "ssm" else M2.init_layer
+    params = {
+        "embed": L.init_embed(keys[0], cfg, dtype),
+        "segments": tuple(init_layer(keys[1 + i], cfg, dtype, stack=n)
+                          for i, n in enumerate(segs)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = L.init_attn(keys[-2], cfg, dtype)
+        params["shared_ffn"] = L.init_ffn(keys[-1], cfg, dtype)
+    if cfg.num_exits:
+        params["exit_norms"] = jnp.ones((len(segs) - 1, cfg.d_model), dtype)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    segs = segment_lengths(cfg)
+    spec_layer = R6.spec_layer if cfg.family == "ssm" else M2.spec_layer
+    specs = {
+        "embed": L.spec_embed(),
+        "segments": tuple(spec_layer(True) for _ in segs),
+        "final_norm": P(None),
+    }
+    if cfg.family == "hybrid":
+        from repro.config import MODEL_AXIS_SIZE
+        specs["shared_attn"] = L.spec_attn(
+            False, q_shard=cfg.padded_heads % MODEL_AXIS_SIZE == 0,
+            kv_shard=cfg.num_kv_heads % MODEL_AXIS_SIZE == 0)
+        specs["shared_ffn"] = L.spec_ffn(False)
+    if cfg.num_exits:
+        specs["exit_norms"] = P(None, None)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+# ----------------------------------------------------------------------------
+# state ("cache") — the recurrent state that ships at a partition cut
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    segs = segment_lengths(cfg)
+    cache = {"segments": []}
+    for n in segs:
+        if cfg.family == "ssm":
+            seg = {
+                "wkv": jnp.zeros((n, batch, cfg.num_heads, cfg.hd, cfg.hd), jnp.float32),
+                "last_tm": jnp.zeros((n, batch, 1, cfg.d_model), jnp.float32),
+                "last_cm": jnp.zeros((n, batch, 1, cfg.d_model), jnp.float32),
+            }
+        else:
+            hm, ns = M2.n_heads(cfg), cfg.ssm_state
+            seg = {
+                "ssm": jnp.zeros((n, batch, hm, ns, M2.DH), jnp.float32),
+                "conv": jnp.zeros((n, batch, M2.CONV_W - 1, M2.d_inner(cfg) + 2 * ns), jnp.float32),
+            }
+        cache["segments"].append(seg)
+    cache["segments"] = tuple(cache["segments"])
+    if cfg.family == "hybrid":
+        napp = cfg.num_layers // cfg.hybrid_attn_period
+        cache["shared_k"] = jnp.zeros((napp, batch, max_seq, cfg.num_kv_heads, cfg.hd), dtype)
+        cache["shared_v"] = jnp.zeros((napp, batch, max_seq, cfg.num_kv_heads, cfg.hd), dtype)
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, batch_axes, seq_axes="model"):
+    segs = segment_lengths(cfg)
+    out = {"segments": []}
+    for _ in segs:
+        if cfg.family == "ssm":
+            # heads (40) don't divide the model axis; shard the key channels
+            out["segments"].append({
+                "wkv": P(None, batch_axes, None, "model", None),
+                "last_tm": P(None, batch_axes, None, None),
+                "last_cm": P(None, batch_axes, None, None),
+            })
+        else:
+            # shard the SSM state dim N (not heads: hm=80 vs 16-way axis is
+            # fine in production but smoke meshes need the same defensive
+            # rule as rwkv)
+            out["segments"].append({
+                "ssm": P(None, batch_axes, None, "model", None),
+                "conv": P(None, batch_axes, None, "model"),
+            })
+    out["segments"] = tuple(out["segments"])
+    if cfg.family == "hybrid":
+        out["shared_k"] = P(None, batch_axes, seq_axes, None, None)
+        out["shared_v"] = P(None, batch_axes, seq_axes, None, None)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# segment runners
+# ----------------------------------------------------------------------------
+
+def _run_rwkv_segment(cfg, segp, x, seg_state, *, mode="auto", use_kernel=False,
+                      remat=False, chunk=16):
+    def body(carry, xs):
+        x = carry
+        lp, st = xs
+        x, wkv, lasts = R6.block(lp, cfg, x, st["wkv"],
+                                 (st["last_tm"].astype(x.dtype), st["last_cm"].astype(x.dtype)),
+                                 mode=mode, use_kernel=use_kernel, chunk=chunk)
+        return x, {"wkv": wkv, "last_tm": lasts[0].astype(jnp.float32),
+                   "last_cm": lasts[1].astype(jnp.float32)}
+
+    fn = jax.checkpoint(body) if remat else body
+    x, new_state = jax.lax.scan(fn, x, (segp, seg_state))
+    return x, new_state
+
+
+def _run_mamba_segment(cfg, params, segp, x, seg_state, shared_cache, app_offset,
+                       positions, *, mode="auto", use_kernel=False, remat=False,
+                       cache_pos=None, prefill_mode=False, attn_impl="auto",
+                       chunk=16):
+    """Segment of `n` mamba blocks; shared attn block after every
+    ``hybrid_attn_period`` blocks.  ``shared_cache``: (k,v) slices for this
+    segment's applications, [napp_seg, B, S, KV, hd] or None (training)."""
+    period = cfg.hybrid_attn_period
+    n = jax.tree_util.tree_leaves(segp)[0].shape[0]
+    napp = n // period
+    # reshape stacked params/state to [napp, period, ...]
+    seg_sup = jax.tree.map(lambda a: a.reshape((napp, period) + a.shape[1:]), segp)
+    st_sup = jax.tree.map(lambda a: a.reshape((napp, period) + a.shape[1:]), seg_state)
+
+    def super_body(carry, xs):
+        x = carry
+        if shared_cache is None:
+            lp, st = xs
+            kc = vc = None
+        else:
+            lp, st, kc, vc = xs
+
+        def mamba_body(c, xs2):
+            x = c
+            lp2, st2 = xs2
+            o, ssm, conv = M2.block(lp2, cfg, x, st2["ssm"],
+                                    st2["conv"].astype(x.dtype), mode=mode,
+                                    use_kernel=use_kernel, chunk=chunk)
+            return x + o, {"ssm": ssm, "conv": conv.astype(jnp.float32)}
+
+        x, new_st = jax.lax.scan(mamba_body, x, (lp, st))
+        # weight-shared attention + ffn block
+        a, nc = L.attention(params["shared_attn"], cfg, x, positions,
+                            kv_cache=None if kc is None else (kc, vc),
+                            cache_pos=cache_pos, impl=attn_impl,
+                            prefill_mode=prefill_mode)
+        x = x + a
+        x = x + L.ffn(params["shared_ffn"], cfg, x)
+        return x, (new_st, (None if nc is None else nc))
+
+    fn = jax.checkpoint(super_body) if remat else super_body
+    xs = (seg_sup, st_sup) if shared_cache is None else (seg_sup, st_sup, shared_cache[0], shared_cache[1])
+    x, (new_state, new_kv) = jax.lax.scan(fn, x, xs)
+    new_state = jax.tree.map(lambda a: a.reshape((n,) + a.shape[2:]), new_state)
+    return x, new_state, new_kv
+
+
+# ----------------------------------------------------------------------------
+# public API (mirrors transformer.py)
+# ----------------------------------------------------------------------------
+
+def _stack_forward(cfg, params, x, cache, *, mode, exit_point=None,
+                   collect_exits=True, use_kernel=False, remat=False,
+                   cache_pos=None, prefill_mode=False, attn_impl="auto",
+                   chunk=16):
+    B, S, _ = x.shape
+    base = 0 if cache_pos is None else cache_pos
+    positions = jnp.broadcast_to(base + jnp.arange(S)[None], (B, S))
+    segs = segment_lengths(cfg)
+    n_seg = len(segs) if exit_point is None else exit_point + 1
+    new_cache = dict(cache)
+    new_cache["segments"] = list(cache["segments"])
+    cur_k = cache.get("shared_k")
+    cur_v = cache.get("shared_v")
+    outs = []
+    app_off = 0
+    for si in range(n_seg):
+        segp = params["segments"][si]
+        if cfg.family == "ssm":
+            x, nst = _run_rwkv_segment(cfg, segp, x, cache["segments"][si],
+                                       mode=mode, use_kernel=use_kernel,
+                                       remat=remat, chunk=chunk)
+        else:
+            napp = segs[si] // cfg.hybrid_attn_period
+            shared = None
+            if cur_k is not None:
+                shared = (jax.lax.dynamic_slice_in_dim(cur_k, app_off, napp, 0),
+                          jax.lax.dynamic_slice_in_dim(cur_v, app_off, napp, 0))
+            x, nst, nkv = _run_mamba_segment(
+                cfg, params, segp, x, cache["segments"][si], shared, app_off,
+                positions, mode=mode, use_kernel=use_kernel, remat=remat,
+                cache_pos=cache_pos, prefill_mode=prefill_mode,
+                attn_impl=attn_impl, chunk=chunk)
+            if nkv is not None and cur_k is not None:
+                cur_k = jax.lax.dynamic_update_slice_in_dim(cur_k, nkv[0].astype(cur_k.dtype), app_off, 0)
+                cur_v = jax.lax.dynamic_update_slice_in_dim(cur_v, nkv[1].astype(cur_v.dtype), app_off, 0)
+            app_off += napp
+        new_cache["segments"][si] = nst
+        is_last = si == n_seg - 1
+        if not is_last and cfg.num_exits and collect_exits:
+            outs.append((si, L.rms_norm(x, params["exit_norms"][si], cfg.norm_eps)))
+        if is_last:
+            norm = params["final_norm"] if exit_point in (None, len(segs) - 1) \
+                else params["exit_norms"][si]
+            outs.append((si, L.rms_norm(x, norm, cfg.norm_eps)))
+    if cur_k is not None:
+        new_cache["shared_k"], new_cache["shared_v"] = cur_k, cur_v
+    new_cache["segments"] = tuple(new_cache["segments"])
+    return outs, new_cache
+
+
+def forward(cfg: ModelConfig, params, tokens, *, exit_point=None,
+            collect_exits=True, use_kernel=False, remat=False, mode="auto",
+            attn_impl="auto", scan_chunk=16, **_):
+    x = L.embed(params["embed"], tokens)
+    cache = init_cache(cfg, tokens.shape[0], max_seq=tokens.shape[1],
+                       dtype=x.dtype)
+    outs, _cache = _stack_forward(cfg, params, x, cache, mode=mode,
+                                  exit_point=exit_point, collect_exits=collect_exits,
+                                  use_kernel=use_kernel, remat=remat,
+                                  prefill_mode=True,
+                                  cache_pos=0 if cfg.family == "hybrid" else None,
+                                  attn_impl=attn_impl, chunk=scan_chunk)
+    return outs, 0.0
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, *, use_kernel=False,
+            mode="auto", attn_impl="auto", **_):
+    x = L.embed(params["embed"], tokens)
+    # hybrid prefill writes shared-attn KV at [0, S)
+    outs, new_cache = _stack_forward(cfg, params, x, cache, mode=mode,
+                                     collect_exits=False, use_kernel=use_kernel,
+                                     prefill_mode=True,
+                                     cache_pos=0 if cfg.family == "hybrid" else None,
+                                     attn_impl=attn_impl)
+    _, h = outs[-1]
+    return h[:, -1:, :], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                exit_point=None, use_kernel=False, **_):
+    x = L.embed(params["embed"], tokens)
+    outs, new_cache = _stack_forward(cfg, params, x, cache, mode="sequential",
+                                     exit_point=exit_point, collect_exits=False,
+                                     use_kernel=use_kernel, cache_pos=pos)
+    _, h = outs[-1]
+    return h, new_cache, []

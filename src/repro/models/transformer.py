@@ -1,0 +1,348 @@
+"""Decoder-only LM stack (dense / MoE / VLM families).
+
+Layers are grouped into *segments* separated by early-exit heads (the paper's
+right-sizing knob); each segment is a ``lax.scan`` over stacked layer params,
+so HLO size is O(num_segments), not O(num_layers).  For ``moe_period == 2``
+(llama4-maverick) the scan unit is a (dense-FFN layer, MoE layer) pair.
+
+Exit heads are tied to the embedding (RMSNorm + shared vocab projection), so
+right-sizing adds compute but no parameters — BranchyNet-faithful.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+
+VIS_DIM = 1024  # stub modality-frontend embedding width
+
+
+# ----------------------------------------------------------------------------
+# structure: units / segments
+# ----------------------------------------------------------------------------
+
+def unit_size(cfg: ModelConfig) -> int:
+    if cfg.num_experts and cfg.moe_period == 2:
+        return 2
+    return 1
+
+
+def num_units(cfg: ModelConfig) -> int:
+    return cfg.num_layers // unit_size(cfg)
+
+
+def segment_boundaries(cfg: ModelConfig):
+    """Exit positions in *units*, strictly inside (0, n_units)."""
+    n = num_units(cfg)
+    u = unit_size(cfg)
+    bounds = []
+    for li in cfg.exit_layer_indices():
+        b = min(max(1, round(li / u)), n - 1)
+        if b not in bounds:
+            bounds.append(b)
+    return sorted(bounds)
+
+
+def segment_lengths(cfg: ModelConfig):
+    bounds = segment_boundaries(cfg)
+    edges = [0] + bounds + [num_units(cfg)]
+    return [b - a for a, b in zip(edges[:-1], edges[1:])]
+
+
+# ----------------------------------------------------------------------------
+# params
+# ----------------------------------------------------------------------------
+
+def _init_unit(key, cfg: ModelConfig, dtype, n: int):
+    ks = jax.random.split(key, 4)
+    u = unit_size(cfg)
+    if cfg.num_experts and u == 2:
+        return {
+            "attn0": L.init_attn(ks[0], cfg, dtype, stack=n),
+            "ffn": L.init_ffn(ks[1], cfg, dtype, stack=n),
+            "attn1": L.init_attn(ks[2], cfg, dtype, stack=n),
+            "moe": MOE.init_moe(ks[3], cfg, dtype, stack=n),
+        }
+    if cfg.num_experts:
+        return {
+            "attn": L.init_attn(ks[0], cfg, dtype, stack=n),
+            "moe": MOE.init_moe(ks[1], cfg, dtype, stack=n),
+        }
+    return {
+        "attn": L.init_attn(ks[0], cfg, dtype, stack=n),
+        "ffn": L.init_ffn(ks[1], cfg, dtype, stack=n),
+    }
+
+
+def _attn_shard_flags(cfg: ModelConfig):
+    from repro.config import MODEL_AXIS_SIZE
+    return (cfg.padded_heads % MODEL_AXIS_SIZE == 0,
+            cfg.num_kv_heads % MODEL_AXIS_SIZE == 0)
+
+
+def _spec_unit(cfg: ModelConfig):
+    qs, ks = _attn_shard_flags(cfg)
+    sa = L.spec_attn(True, q_shard=qs, kv_shard=ks)
+    if cfg.num_experts and unit_size(cfg) == 2:
+        return {"attn0": sa, "ffn": L.spec_ffn(True),
+                "attn1": sa, "moe": MOE.spec_moe(True)}
+    if cfg.num_experts:
+        return {"attn": sa, "moe": MOE.spec_moe(True)}
+    return {"attn": sa, "ffn": L.spec_ffn(True)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    segs = segment_lengths(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params = {
+        "embed": L.init_embed(keys[0], cfg, dtype),
+        "segments": tuple(_init_unit(keys[i + 1], cfg, dtype, n)
+                          for i, n in enumerate(segs)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.num_exits:
+        params["exit_norms"] = jnp.ones((len(segs) - 1, cfg.d_model), dtype)
+    if cfg.frontend == "vision":
+        params["mm_proj"] = L.dense_init(keys[-1], (VIS_DIM, cfg.d_model), dtype, VIS_DIM)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    segs = segment_lengths(cfg)
+    specs = {
+        "embed": L.spec_embed(),
+        "segments": tuple(_spec_unit(cfg) for _ in segs),
+        "final_norm": P(None),
+    }
+    if cfg.num_exits:
+        specs["exit_norms"] = P(None, None)
+    if cfg.frontend == "vision":
+        specs["mm_proj"] = P(None, "data")
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0), dtype))
+
+
+# ----------------------------------------------------------------------------
+# blocks
+# ----------------------------------------------------------------------------
+
+def _seq_shard(x):
+    """Sequence parallelism (EXPERIMENTS.md §Perf A3): constrain the residual
+    stream to be sequence-sharded over the model axis between blocks, so
+    GSPMD lowers the TP output all-reduces into reduce-scatter + all-gather
+    pairs (half the ring traffic on the residual activations)."""
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+
+
+def _unit_fwd(cfg, lp, x, positions, *, moe_dispatch="einsum", attn_impl="auto",
+              kv=None, cache_pos=None, prefill_mode=False, seq_parallel=False):
+    """One scan unit. kv: dict of stacked caches for this unit or None.
+    Returns (x, aux, new_kv)."""
+    aux = 0.0
+    new_kv = {}
+    maybe_shard = _seq_shard if seq_parallel else (lambda x: x)
+
+    def attn(name, x):
+        if kv is None:
+            c = None
+        elif name + "_k_scale" in kv:
+            c = {"k": kv[name + "_k"], "v": kv[name + "_v"],
+                 "k_scale": kv[name + "_k_scale"], "v_scale": kv[name + "_v_scale"]}
+        else:
+            c = (kv[name + "_k"], kv[name + "_v"])
+        out, nc = L.attention(lp[name], cfg, x, positions, kv_cache=c,
+                              cache_pos=cache_pos, impl=attn_impl,
+                              prefill_mode=prefill_mode)
+        if isinstance(nc, dict):
+            new_kv[name + "_k"], new_kv[name + "_v"] = nc["k"], nc["v"]
+            new_kv[name + "_k_scale"] = nc["k_scale"]
+            new_kv[name + "_v_scale"] = nc["v_scale"]
+        elif nc is not None:
+            new_kv[name + "_k"], new_kv[name + "_v"] = nc
+        return x + out
+
+    if cfg.num_experts and unit_size(cfg) == 2:
+        x = maybe_shard(attn("attn0", x))
+        x = maybe_shard(x + L.ffn(lp["ffn"], cfg, x))
+        x = maybe_shard(attn("attn1", x))
+        mo, a = MOE.moe_ffn(lp["moe"], cfg, x, dispatch_mode=moe_dispatch)
+        x, aux = maybe_shard(x + mo), a
+    elif cfg.num_experts:
+        x = maybe_shard(attn("attn", x))
+        mo, a = MOE.moe_ffn(lp["moe"], cfg, x, dispatch_mode=moe_dispatch)
+        x, aux = maybe_shard(x + mo), a
+    else:
+        x = maybe_shard(attn("attn", x))
+        x = maybe_shard(x + L.ffn(lp["ffn"], cfg, x))
+    return x, aux, (new_kv if kv is not None else None)
+
+
+def _run_segment(cfg, seg_params, x, positions, *, moe_dispatch="einsum",
+                 attn_impl="auto", seg_cache=None, cache_pos=None, remat=False,
+                 prefill_mode=False, seq_parallel=False):
+    """Scan a segment of stacked units. Returns (x, aux_sum, new_seg_cache)."""
+
+    def body(carry, xs):
+        x, aux = carry
+        lp = xs if seg_cache is None else xs[0]
+        kv = None if seg_cache is None else xs[1]
+        x, a, nkv = _unit_fwd(cfg, lp, x, positions, moe_dispatch=moe_dispatch,
+                              attn_impl=attn_impl, kv=kv, cache_pos=cache_pos,
+                              prefill_mode=prefill_mode, seq_parallel=seq_parallel)
+        return (x, aux + a), nkv
+
+    fn = jax.checkpoint(body) if remat else body
+    xs = seg_params if seg_cache is None else (seg_params, seg_cache)
+    (x, aux), new_cache = jax.lax.scan(fn, (x, 0.0), xs)
+    return x, aux, new_cache
+
+
+def _embed_inputs(cfg, params, tokens, prefix_emb):
+    x = L.embed(params["embed"], tokens)
+    if cfg.frontend == "vision" and prefix_emb is not None:
+        px = prefix_emb.astype(x.dtype) @ params["mm_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_emb=None, *,
+            exit_point: Optional[int] = None, moe_dispatch="einsum",
+            attn_impl="auto", remat=False, collect_exits=True,
+            seq_parallel=False):
+    """Training/eval forward.  Returns (list of (exit_idx, hidden_normed),
+    aux_loss).  Hidden states are returned (not logits) so callers fuse the
+    vocab projection with their loss / confidence computation."""
+    B = tokens.shape[0]
+    x = _embed_inputs(cfg, params, tokens, prefix_emb)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    segs = segment_lengths(cfg)
+    n_seg = len(segs) if exit_point is None else exit_point + 1
+    outs = []
+    aux = 0.0
+    for si in range(n_seg):
+        x, a, _ = _run_segment(cfg, params["segments"][si], x, positions,
+                               moe_dispatch=moe_dispatch, attn_impl=attn_impl,
+                               remat=remat, seq_parallel=seq_parallel)
+        aux = aux + a
+        is_last = si == n_seg - 1
+        if not is_last and cfg.num_exits and collect_exits:
+            h = L.rms_norm(x, params["exit_norms"][si], cfg.norm_eps)
+            outs.append((si, h))
+        if is_last:
+            norm = params["final_norm"] if exit_point in (None, len(segs) - 1) \
+                else params["exit_norms"][si]
+            outs.append((si, L.rms_norm(x, norm, cfg.norm_eps)))
+    return outs, aux
+
+
+# ----------------------------------------------------------------------------
+# KV cache / decode
+# ----------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16,
+               quant: bool = False):
+    segs = segment_lengths(cfg)
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    u = unit_size(cfg)
+    names = ["attn0", "attn1"] if (cfg.num_experts and u == 2) else ["attn"]
+    cache = []
+    for n in segs:
+        seg = {}
+        for nm in names:
+            if quant:
+                seg[nm + "_k"] = jnp.zeros((n, batch, max_seq, kvh, hd), jnp.int8)
+                seg[nm + "_v"] = jnp.zeros((n, batch, max_seq, kvh, hd), jnp.int8)
+                seg[nm + "_k_scale"] = jnp.zeros((n, batch, max_seq, kvh), jnp.bfloat16)
+                seg[nm + "_v_scale"] = jnp.zeros((n, batch, max_seq, kvh), jnp.bfloat16)
+            else:
+                seg[nm + "_k"] = jnp.zeros((n, batch, max_seq, kvh, hd), dtype)
+                seg[nm + "_v"] = jnp.zeros((n, batch, max_seq, kvh, hd), dtype)
+        cache.append(seg)
+    return tuple(cache)
+
+
+def cache_specs(cfg: ModelConfig, batch_axes, seq_axes="model", quant: bool = False):
+    segs = segment_lengths(cfg)
+    u = unit_size(cfg)
+    names = ["attn0", "attn1"] if (cfg.num_experts and u == 2) else ["attn"]
+    spec = P(None, batch_axes, seq_axes, None, None)
+    sspec = P(None, batch_axes, seq_axes, None)
+    out = []
+    for _ in segs:
+        seg = {nm + sfx: spec for nm in names for sfx in ("_k", "_v")}
+        if quant:
+            seg.update({nm + sfx: sspec for nm in names
+                        for sfx in ("_k_scale", "_v_scale")})
+        out.append(seg)
+    return tuple(out)
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, prefix_emb=None, *,
+            moe_dispatch="einsum", attn_impl="auto"):
+    """Fills cache positions [0, S); returns (final_hidden_last_tok, cache)."""
+    B = tokens.shape[0]
+    x = _embed_inputs(cfg, params, tokens, prefix_emb)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    new_cache = []
+    for si, segp in enumerate(params["segments"]):
+        x, _, nc = _run_segment(cfg, segp, x, positions, moe_dispatch=moe_dispatch,
+                                attn_impl=attn_impl, seg_cache=cache[si],
+                                cache_pos=0, prefill_mode=True)
+        new_cache.append(nc)
+    h = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    return h, tuple(new_cache)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                exit_point: Optional[int] = None, moe_dispatch="einsum",
+                with_exit_confidence: bool = False, use_exit_kernel: bool = False):
+    """One decode step.  tokens: [B,1]; pos: scalar int32 cache position.
+
+    ``exit_point`` (static) right-sizes the model: only segments
+    [0, exit_point] are executed and the exit head at that boundary produces
+    the hidden state — the paper's knob compiled as a variant.
+    Returns (normed_hidden [B,1,D], new_cache, exit_confidences).
+    """
+    B = tokens.shape[0]
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(pos[None, None] if jnp.ndim(pos) == 0 else pos,
+                                 (B, 1))
+    segs = segment_lengths(cfg)
+    n_seg = len(segs) if exit_point is None else exit_point + 1
+    new_cache = list(cache)
+    confs = []
+    for si in range(n_seg):
+        x, _, nc = _run_segment(cfg, params["segments"][si], x, positions,
+                                moe_dispatch=moe_dispatch,
+                                seg_cache=cache[si], cache_pos=pos)
+        new_cache[si] = nc
+        is_last = si == n_seg - 1
+        if with_exit_confidence and not is_last and cfg.num_exits:
+            h = L.rms_norm(x, params["exit_norms"][si], cfg.norm_eps)
+            confs.append(_exit_confidence(params["embed"], h, use_exit_kernel))
+    norm = params["final_norm"] if exit_point in (None, len(segs) - 1) \
+        else params["exit_norms"][n_seg - 1]
+    h = L.rms_norm(x, norm, cfg.norm_eps)
+    return h, tuple(new_cache), confs
+
+
+def _exit_confidence(embed_table, h, use_kernel):
+    if use_kernel:
+        from repro.kernels.exit_head import ops as eh_ops
+        return eh_ops.exit_confidence(h, embed_table)
+    from repro.kernels.exit_head import ref as eh_ref
+    return eh_ref.exit_confidence(h, embed_table)

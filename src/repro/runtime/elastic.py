@@ -1,0 +1,50 @@
+"""Elastic scaling: re-plan when tier capacity or mesh size changes.
+
+Two levers, both Edgent-native:
+* serving — the planner re-solves (exit, partition) with a re-scaled
+  RooflineLatencyModel when chips join/leave a tier;
+* training — the data-parallel degree changes; batch is re-sharded and the
+  step re-jitted for the surviving mesh (dry-run-validated re-mesh).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.latency_model import RooflineLatencyModel
+from repro.core.partitioner import CoInferencePlan, optimize_with_fallback
+
+
+@dataclass
+class TierSpec:
+    chips: int
+    efficiency: float = 0.5
+
+
+@dataclass
+class ElasticPlanner:
+    """Re-derive co-inference plans as tier sizes change."""
+    graph: object
+    latency_req_s: float
+    link_bps: float
+
+    def plan_for(self, edge: TierSpec, device: TierSpec) -> CoInferencePlan:
+        f_edge = RooflineLatencyModel(chips=edge.chips, efficiency=edge.efficiency)
+        f_dev = RooflineLatencyModel(chips=device.chips, efficiency=device.efficiency)
+        return optimize_with_fallback(self.graph, f_edge, f_dev,
+                                      self.link_bps, self.latency_req_s)
+
+    def shrink_event(self, edge: TierSpec, device: TierSpec,
+                     lost_chips: int) -> Tuple[CoInferencePlan, TierSpec]:
+        """A failure removed chips from the edge tier: re-plan."""
+        new_edge = TierSpec(max(1, edge.chips - lost_chips), edge.efficiency)
+        return self.plan_for(new_edge, device), new_edge
+
+
+def viable_mesh(total_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid for the surviving device count, keeping the
+    model-parallel degree fixed (params resharding-free)."""
+    data = max(1, total_devices // model_parallel)
+    return data, model_parallel

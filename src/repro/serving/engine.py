@@ -1,0 +1,159 @@
+"""Batched-request serving engine with Edgent planning.
+
+Pipeline per batch: admit (SLO scheduler) -> prefill -> decode loop.  Before
+every decode step the engine consults the planner with the *current*
+bandwidth (static Algorithm 1 or dynamic Algorithm 3), obtaining the
+(exit point, partition) plan; the decode step executes the right-sized model
+(``exit_point`` static argument -> the compiled variant that stops at that
+segment), virtual time is billed per tier + link, and deadline demotion
+rescues batches that fall behind.
+
+Token values come from real model execution (smoke-scale on CPU); timing
+comes from the latency models — deterministic and host-independent.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import InferenceGraph
+from repro.core.partitioner import branch_latency
+from repro.core.planner import EdgentPlanner
+from repro.models.api import Model
+from repro.serving.scheduler import SLOScheduler, pick_exit
+from repro.serving.tiers import Link
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int
+    slo_s: float
+    arrival_s: float = 0.0
+
+
+@dataclass
+class ServeStats:
+    latencies: List[float] = field(default_factory=list)
+    met_slo: List[bool] = field(default_factory=list)
+    exits: List[int] = field(default_factory=list)
+    partitions: List[int] = field(default_factory=list)
+    throughputs: List[float] = field(default_factory=list)
+    tokens: Dict[int, List[int]] = field(default_factory=dict)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "requests": len(self.latencies),
+            "p50_latency_s": float(np.percentile(self.latencies, 50)) if self.latencies else 0.0,
+            "p99_latency_s": float(np.percentile(self.latencies, 99)) if self.latencies else 0.0,
+            "slo_attainment": float(np.mean(self.met_slo)) if self.met_slo else 0.0,
+            "mean_exit": float(np.mean(self.exits)) if self.exits else 0.0,
+            "mean_throughput_tps": float(np.mean(self.throughputs)) if self.throughputs else 0.0,
+        }
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, graph: InferenceGraph,
+                 planner: EdgentPlanner, link: Link, *, batch_size: int = 4,
+                 max_seq: int = 128, dtype=jnp.float32,
+                 dynamic: bool = False, demote_on_deadline: bool = True):
+        self.model, self.params, self.graph = model, params, graph
+        self.planner, self.link = planner, link
+        self.batch_size, self.max_seq = batch_size, max_seq
+        self.dtype = dtype
+        self.dynamic = dynamic
+        self.demote = demote_on_deadline
+        self.sched = SLOScheduler(batch_size)
+        self._decode_jit: Dict[Optional[int], object] = {}
+        # the planner's graph may describe the FULL-size architecture while
+        # the executing model is the reduced config: map exit points
+        # proportionally (graph exit i -> model segment)
+        self.n_graph = graph.num_exits
+        self.n_model = model.num_segments
+        self._exit_points = list(range(1, self.n_graph + 1))
+
+    # ------------------------------------------------------------ timing
+    def _step_time(self, exit_point: int, partition: int, bw: float) -> float:
+        """Virtual per-token latency of (exit, partition) at bandwidth bw."""
+        return branch_latency(self.graph, exit_point, partition,
+                              self.planner.f_edge, self.planner.f_device, bw)
+
+    def _to_model_exit(self, graph_exit: int) -> int:
+        return max(1, round(graph_exit * self.n_model / self.n_graph))
+
+    # ------------------------------------------------------------ compiled steps
+    def _decode_fn(self, graph_exit: Optional[int]):
+        mexit = None if graph_exit is None else self._to_model_exit(graph_exit)
+        if mexit not in self._decode_jit:
+            ep = None if mexit is None or mexit >= self.n_model else mexit - 1
+            fn = jax.jit(
+                lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                            exit_point=ep)[:2])
+            self._decode_jit[mexit] = fn
+        return self._decode_jit[mexit]
+
+    # ------------------------------------------------------------ serve
+    def serve(self, requests: List[Request]) -> ServeStats:
+        stats = ServeStats()
+        for r in requests:
+            self.sched.submit(r.rid, r.arrival_s + r.slo_s)
+        reqs = {r.rid: r for r in requests}
+        while len(self.sched):
+            batch_ids = self.sched.next_batch()
+            batch = [reqs[i] for i in batch_ids]
+            self._serve_batch(batch, stats)
+        return stats
+
+    def _serve_batch(self, batch: List[Request], stats: ServeStats):
+        B = len(batch)
+        prompt_len = max(len(r.prompt) for r in batch)
+        toks = np.zeros((B, prompt_len), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, -len(r.prompt):] = r.prompt            # left-pad
+        max_new = max(r.max_new_tokens for r in batch)
+        cache = self.model.init_cache(B, prompt_len + max_new + 1,
+                                      dtype=self.dtype, enc_len=prompt_len)
+        # ---- plan at batch start
+        bw = self.link.current()
+        plan = self.planner.plan(bw, dynamic=self.dynamic)
+        clock = 0.0
+        # prefill (virtual time: prefill ~ prompt_len * step cost; value: real)
+        h, cache = self.model.prefill(self.params, jnp.asarray(toks), cache)
+        clock += self._step_time(plan.exit_point, plan.partition, bw) * \
+            max(1, prompt_len // 8)
+        logits = self.model.logits(self.params, h)
+        next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        out_tokens = [[] for _ in range(B)]
+        budget = min(r.slo_s for r in batch)
+        exit_point = plan.exit_point
+        for step in range(max_new):
+            bw = self.link.current()
+            if self.demote:
+                per_exit = [self._step_time(e, plan.partition, bw)
+                            for e in self._exit_points]
+                exit_point = pick_exit(budget - clock, per_exit,
+                                       max_new - step, plan.exit_point)
+            t_step = self._step_time(exit_point, plan.partition, bw)
+            fn = self._decode_fn(exit_point)
+            pos = jnp.asarray(prompt_len + step, jnp.int32)
+            h, cache = fn(self.params, cache, next_tok, pos)
+            logits = self.model.logits(self.params, h)
+            next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+            for i in range(B):
+                if step < batch[i].max_new_tokens:
+                    out_tokens[i].append(int(next_tok[i, 0]))
+            clock += t_step
+            self.link.advance()
+        for i, r in enumerate(batch):
+            stats.latencies.append(clock)
+            stats.met_slo.append(clock <= r.slo_s)
+            stats.exits.append(exit_point)
+            stats.partitions.append(plan.partition)
+            stats.throughputs.append(max_new / max(clock, 1e-9))
+            stats.tokens[r.rid] = out_tokens[i]

@@ -1,0 +1,36 @@
+import os
+
+# Smoke tests and benches must see the real single device; ONLY the dry-run
+# launcher sets xla_force_host_platform_device_count (see launch/dryrun.py).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.fixture(scope="session")
+def alexnet_setup():
+    """Shared branchy AlexNet + params + graph (expensive to re-init)."""
+    from repro.core import alexnet_graph
+    from repro.models.alexnet import BranchyAlexNet, BranchyAlexNetConfig
+
+    net = BranchyAlexNet(BranchyAlexNetConfig())
+    params = net.init(jax.random.key(0))
+    graph = alexnet_graph(net)
+    return net, params, graph
+
+
+@pytest.fixture(scope="session")
+def alexnet_planner(alexnet_setup):
+    from repro.core import EdgentPlanner
+
+    net, params, graph = alexnet_setup
+    x = jax.random.normal(jax.random.key(1), (1, 32, 32, 3))
+    return EdgentPlanner(graph, latency_req_s=1.0).offline_static(params, x)

@@ -1,0 +1,44 @@
+"""Bayesian online change-point detection (Algorithm 3's D function)."""
+import numpy as np
+
+from repro.core.bocd import BOCD, BandwidthStateDetector
+
+
+def test_detects_mean_shift():
+    rng = np.random.default_rng(0)
+    xs = np.concatenate([rng.normal(5.0, 0.3, 80), rng.normal(1.0, 0.3, 80)])
+    det = BandwidthStateDetector(hazard=1 / 60)
+    for x in xs:
+        det.update(x)
+    assert any(70 <= c <= 95 for c in det.changes), det.changes
+    assert abs(det.current_state - 1.0) < 0.5
+
+
+def test_stable_sequence_few_changes():
+    rng = np.random.default_rng(1)
+    xs = rng.normal(3.0, 0.2, 200)
+    det = BandwidthStateDetector(hazard=1 / 100)
+    for x in xs:
+        det.update(x)
+    assert len(det.changes) <= 4
+    assert abs(det.current_state - 3.0) < 0.3
+
+
+def test_multiple_segments():
+    rng = np.random.default_rng(2)
+    xs = np.concatenate([rng.normal(m, 0.2, 60) for m in (2.0, 6.0, 1.0, 4.0)])
+    det = BandwidthStateDetector(hazard=1 / 50)
+    states = [det.update(x) for x in xs]
+    # state estimate tracks each segment by its end
+    assert abs(states[55] - 2.0) < 0.6
+    assert abs(states[115] - 6.0) < 0.8
+    assert abs(states[175] - 1.0) < 0.6
+    assert abs(states[235] - 4.0) < 0.8
+
+
+def test_run_length_truncation_bounded():
+    det = BOCD(max_run=64)
+    rng = np.random.default_rng(3)
+    for x in rng.normal(0, 1, 500):
+        det.update(float(x))
+    assert len(det.r_prob) <= 65

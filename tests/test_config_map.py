@@ -1,0 +1,73 @@
+"""Algorithm 2 (configuration map) + Eq. (1) reward."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import config_map as CM
+from repro.core.graph import GraphLayer, InferenceGraph
+
+
+class ConstModel:
+    def __init__(self, t):
+        self.t = t
+
+    def predict(self, layer):
+        return self.t
+
+
+def _graph():
+    branches = [[GraphLayer(f"l{i}_{j}", "fc", {"in_size": 1.0, "out_size": 1.0},
+                            out_bytes=1000) for j in range(2 * i)]
+                for i in range(1, 4)]
+    return InferenceGraph("toy", branches, accuracy=[0.5, 0.7, 0.9],
+                          input_bytes=4000, result_bytes=8)
+
+
+def test_reward_eq1():
+    assert CM.reward_fn(0.8, 0.5, 1.0) == pytest.approx(math.exp(0.8) + 2.0)
+    assert CM.reward_fn(0.8, 1.5, 1.0) == 0.0     # misses the deadline -> 0
+
+
+def test_reward_prioritizes_accuracy_then_throughput():
+    # both feasible: higher accuracy wins even when slower (exp(acc) dominates
+    # only when throughput difference is small)
+    r_acc = CM.reward_fn(0.9, 0.9, 1.0)
+    r_fast = CM.reward_fn(0.5, 0.8, 1.0)
+    assert r_acc != r_fast
+
+
+def test_sketch_states_means():
+    traces = [[1.0, 2.0, 3.0], [10.0, 10.0], []]
+    states = CM.sketch_states(traces)
+    assert states == [2.0, 10.0]
+
+
+def test_build_map_and_lookup():
+    g = _graph()
+    fe, fd = ConstModel(0.01), ConstModel(0.05)
+    states = [1e4, 1e5, 1e6]
+    cmap = CM.build_map(g, fe, fd, states, latency_req_s=1.0)
+    assert set(cmap) == {1e4, 1e5, 1e6}
+    for s, e in cmap.items():
+        assert e.reward >= 0
+    entry = CM.lookup(cmap, 2e5)       # nearest state = 1e5
+    assert entry is cmap[1e5]
+    # map entry == brute-force argmax of Eq. (1) over all (exit, partition)
+    from repro.core.partitioner import branch_latency
+    best = max(((i, p) for i in range(1, 4)
+                for p in range(len(g.branches[i - 1]) + 1)),
+               key=lambda ip: CM.reward_fn(
+                   g.accuracy[ip[0] - 1],
+                   branch_latency(g, ip[0], ip[1], fe, fd, 1e6), 1.0))
+    assert (cmap[1e6].exit_point, cmap[1e6].partition) == best
+
+
+def test_map_respects_deadline():
+    g = _graph()
+    fe, fd = ConstModel(0.4), ConstModel(2.0)    # slow tiers
+    cmap = CM.build_map(g, fe, fd, [1e6], latency_req_s=1.0)
+    e = cmap[1e6]
+    # feasible strategies exist only at exit 1 (2 layers * 0.4 = 0.8s edge)
+    if e.reward > 0:
+        assert e.latency_s <= 1.0

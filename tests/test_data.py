@@ -1,0 +1,58 @@
+"""Synthetic data + bandwidth trace generators."""
+import numpy as np
+
+from repro.data.bandwidth import MBPS, belgium_lte_like, dcn_trace, oboe_like_traces
+from repro.data.synthetic import cifar_like, token_stream
+
+
+def test_cifar_like_learnable():
+    """Class templates are separable: nearest-template classification beats
+    chance by a wide margin (so per-exit accuracy differences are real)."""
+    rng = np.random.default_rng(0)
+    x, y = cifar_like(rng, 256, noise=0.7)
+    xt, yt = cifar_like(rng, 256, noise=0.7)
+    # nearest-centroid on training means
+    cents = np.stack([x[y == c].mean(0) for c in range(10)])
+    pred = np.argmin(((xt[:, None] - cents[None]) ** 2).sum((2, 3, 4)), axis=1)
+    assert (pred == yt).mean() > 0.5
+
+
+def test_cifar_deterministic_templates():
+    rng1 = np.random.default_rng(0)
+    rng2 = np.random.default_rng(0)
+    x1, y1 = cifar_like(rng1, 16)
+    x2, y2 = cifar_like(rng2, 16)
+    np.testing.assert_array_equal(x1, x2)
+
+
+def test_token_stream_structure():
+    rng = np.random.default_rng(0)
+    toks = token_stream(rng, 8, 256, vocab=100)
+    assert toks.shape == (8, 256)
+    assert toks.min() >= 0 and toks.max() < 100
+    # bigram structure: successor entropy far below uniform
+    from collections import Counter
+    pairs = Counter(zip(toks[:, :-1].ravel(), toks[:, 1:].ravel()))
+    top = sum(c for _, c in pairs.most_common(100))
+    assert top / sum(pairs.values()) > 0.5
+
+
+def test_oboe_traces_stats():
+    traces = oboe_like_traces(seed=0, num=428)
+    assert len(traces) == 428
+    means = np.array([t.mean() for t in traces]) / MBPS
+    assert means.min() >= 0.0 and means.max() <= 6.5
+    assert all(len(t) == 49 for t in traces)
+
+
+def test_belgium_lte_range():
+    tr = belgium_lte_like(seed=0, length=600, transport="bus")
+    assert tr.shape == (600,)
+    assert tr.min() > 0 and tr.max() <= 10.5 * MBPS
+
+
+def test_dcn_trace_congestion_episodes():
+    tr = dcn_trace(seed=0, length=600)
+    gbps = tr * 8 / 1e9
+    assert gbps.max() > 300          # uncongested baseline
+    assert gbps.min() < 100          # congestion episodes exist

@@ -1,0 +1,72 @@
+"""Table-I regression predictors + roofline predictor."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import GraphLayer
+from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,
+                                      RooflineLatencyModel, ScaledLatencyModel)
+
+
+def _records(kind, theta, n=30, seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    from repro.core.latency_model import TABLE_I_FEATURES
+    names = TABLE_I_FEATURES[kind]
+    recs = []
+    for _ in range(n):
+        feats = {nm: float(rng.uniform(1, 100)) for nm in names}
+        lat = sum(theta[i] * feats[nm] for i, nm in enumerate(names)) + theta[-1]
+        lat += noise * rng.normal()
+        recs.append(ProfileRecord(kind, feats, lat))
+    return recs
+
+
+def test_exact_recovery_linear():
+    theta = [0.3, 0.05, 2.0]
+    m = RegressionLatencyModel().fit(_records("conv", theta))
+    np.testing.assert_allclose(m.theta["conv"], theta, rtol=1e-6)
+    assert m.r2()["conv"] > 0.999999
+
+
+def test_predict_matches_design():
+    theta = [0.1, 1.0]
+    m = RegressionLatencyModel().fit(_records("relu", theta))
+    lay = GraphLayer("x", "relu", {"in_size": 50.0}, out_bytes=1)
+    assert m.predict(lay) == pytest.approx(0.1 * 50 + 1.0, rel=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.floats(1e-4, 1.0), b=st.floats(1e-4, 1.0), c=st.floats(0.0, 5.0),
+       seed=st.integers(0, 100))
+def test_property_fc_regression_recovers(a, b, c, seed):
+    m = RegressionLatencyModel().fit(_records("fc", [a, b, c], seed=seed))
+    np.testing.assert_allclose(m.theta["fc"], [a, b, c], rtol=1e-4, atol=1e-6)
+
+
+def test_noise_r2_reasonable():
+    m = RegressionLatencyModel().fit(_records("pool", [0.5, 0.2, 1.0], n=200,
+                                              noise=0.5))
+    assert 0.8 < m.r2()["pool"] <= 1.0
+
+
+def test_unknown_kind_raises():
+    m = RegressionLatencyModel().fit(_records("relu", [0.1, 0.0]))
+    with pytest.raises(KeyError):
+        m.predict(GraphLayer("x", "conv", {"in_maps": 3, "comp": 1}, 1))
+
+
+def test_roofline_model_terms():
+    m = RooflineLatencyModel(chips=2, peak_flops=100.0, hbm_bw=10.0,
+                             efficiency=1.0)
+    lay = GraphLayer("x", "block", {}, out_bytes=1, flops=400.0, bytes_moved=10.0)
+    # compute-bound: 400/(2*100)=2.0 > 10/(2*10)=0.5
+    assert m.predict(lay) == pytest.approx(2.0)
+    lay2 = GraphLayer("y", "block", {}, out_bytes=1, flops=10.0, bytes_moved=400.0)
+    assert m.predict(lay2) == pytest.approx(20.0)
+
+
+def test_scaled_model():
+    base = RooflineLatencyModel(chips=1, peak_flops=100.0, hbm_bw=10.0,
+                                efficiency=1.0)
+    lay = GraphLayer("x", "block", {}, out_bytes=1, flops=100.0, bytes_moved=0.0)
+    assert ScaledLatencyModel(base, 3.0).predict(lay) == pytest.approx(3.0)

@@ -1,0 +1,94 @@
+"""Layer-level unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+
+
+def test_rmsnorm_unit_scale(rng):
+    x = jax.random.normal(rng, (4, 8, 32))
+    y = L.rms_norm(x, jnp.ones((32,)), 1e-6)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative(rng):
+    x = jax.random.normal(rng, (1, 6, 2, 16))
+    pos = jnp.arange(6)[None]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.fold_in(rng, 1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.array([[i]]), 1e4)
+        kj = L.apply_rope(k, jnp.array([[j]]), 1e4)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4
+
+
+def test_flash_jnp_matches_dense(rng):
+    B, S, H, KV, hd = 2, 128, 4, 2, 32
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    dense = L._sdpa(q, k, v, L.causal_bias(S, S))
+    flash = L.flash_attention_jnp(q, k, v, causal=True, q_block=32, kv_block=32)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_jnp_noncausal(rng):
+    B, S, H, hd = 1, 64, 2, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    dense = L._sdpa(q, k, v, 0.0)
+    flash = L.flash_attention_jnp(q, k, v, causal=False, q_block=16, kv_block=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(flash),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attention_decode_consistency(rng):
+    """Prefill-mode cache writes + decode attention == full causal attention."""
+    cfg = get_smoke_config("granite-3-2b")
+    p = L.init_attn(rng, cfg, jnp.float32)
+    B, S = 1, 10
+    x = jax.random.normal(jax.random.fold_in(rng, 3), (B, S + 1, cfg.d_model)) * 0.1
+    pos = jnp.arange(S + 1)[None]
+    full, _ = L.attention(p, cfg, x, pos, impl="dense")
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    cache = (jnp.zeros((B, S + 1, kvh, hd)), jnp.zeros((B, S + 1, kvh, hd)))
+    _, cache = L.attention(p, cfg, x[:, :S], pos[:, :S], kv_cache=cache,
+                           cache_pos=0, prefill_mode=True, impl="dense")
+    out, _ = L.attention(p, cfg, x[:, S:], pos[:, S:], kv_cache=cache,
+                         cache_pos=jnp.asarray(S), prefill_mode=False)
+    np.testing.assert_allclose(np.asarray(full[:, -1]), np.asarray(out[:, 0]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_einsum_vs_gather(rng):
+    from repro.models import moe as MOE
+    cfg = get_smoke_config("llama4-scout-17b-a16e")
+    p = MOE.init_moe(rng, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 16, cfg.d_model)) * 0.3
+    y1, aux1 = MOE.moe_ffn(p, cfg, x, dispatch_mode="einsum")
+    y2, aux2 = MOE.moe_ffn(p, cfg, x, dispatch_mode="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+def test_alexnet_layer_shapes():
+    from repro.models.alexnet import BranchyAlexNet, BranchyAlexNetConfig
+    net = BranchyAlexNet(BranchyAlexNetConfig())
+    # paper branch lengths
+    assert [len(net.branch_layers(i)) for i in range(1, 6)] == [12, 16, 19, 20, 22]
+    # every layer kind is a Table-I type
+    kinds = {s.kind for i in range(1, 6) for s in net.branch_layers(i)}
+    assert kinds <= {"conv", "relu", "lrn", "pool", "dropout", "fc"}

@@ -1,0 +1,112 @@
+"""Algorithm 1 invariants + hypothesis properties (the paper's claims)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import GraphLayer, InferenceGraph
+from repro.core.partitioner import (best_partition, branch_latency, optimize,
+                                    optimize_with_fallback)
+
+
+class ConstModel:
+    """Latency model with fixed per-layer latency."""
+    def __init__(self, per_layer):
+        self.per_layer = per_layer
+
+    def predict(self, layer):
+        return self.per_layer[layer.name]
+
+
+def _graph(n_exits=3, layers_per=4, out_bytes=1000, input_bytes=5000):
+    branches = []
+    for i in range(1, n_exits + 1):
+        branches.append([
+            GraphLayer(name=f"l{i}_{j}", kind="fc",
+                       features={"in_size": 1.0, "out_size": 1.0},
+                       out_bytes=out_bytes)
+            for j in range(layers_per * i)])
+    return InferenceGraph("toy", branches,
+                          accuracy=[0.5 + 0.1 * i for i in range(n_exits)],
+                          input_bytes=input_bytes, result_bytes=8)
+
+
+def test_feasible_plan_meets_slo():
+    g = _graph()
+    lat = {l.name: 0.01 for b in g.branches for l in b}
+    fe, fd = ConstModel(lat), ConstModel({k: v * 10 for k, v in lat.items()})
+    plan = optimize(g, fe, fd, bandwidth_bps=1e6, latency_req_s=0.5)
+    assert plan is not None
+    assert plan.latency_s <= 0.5
+    assert branch_latency(g, plan.exit_point, plan.partition, fe, fd, 1e6) \
+        == pytest.approx(plan.latency_s)
+
+
+def test_prefers_larger_exit():
+    g = _graph()
+    lat = {l.name: 0.001 for b in g.branches for l in b}
+    fe, fd = ConstModel(lat), ConstModel(lat)
+    plan = optimize(g, fe, fd, 1e9, 10.0)
+    assert plan.exit_point == g.num_exits        # everything feasible -> best accuracy
+
+
+def test_infeasible_returns_none_and_fallback():
+    g = _graph()
+    lat = {l.name: 1.0 for b in g.branches for l in b}
+    fe, fd = ConstModel(lat), ConstModel(lat)
+    assert optimize(g, fe, fd, 1e6, 0.001) is None
+    plan = optimize_with_fallback(g, fe, fd, 1e6, 0.001)
+    assert not plan.feasible
+    assert plan.exit_point == 1                  # min-latency rescue
+
+
+def test_zero_partition_has_no_transfer():
+    g = _graph()
+    lat = {l.name: 0.01 for b in g.branches for l in b}
+    fe, fd = ConstModel(lat), ConstModel(lat)
+    # device-only cost is independent of bandwidth
+    l1 = branch_latency(g, 2, 0, fe, fd, 1.0)
+    l2 = branch_latency(g, 2, 0, fe, fd, 1e12)
+    assert l1 == l2
+
+
+@settings(max_examples=40, deadline=None)
+@given(bw=st.floats(1e3, 1e9), slo=st.floats(0.01, 5.0),
+       dev_slow=st.floats(1.0, 100.0))
+def test_property_plan_feasibility_and_optimality(bw, slo, dev_slow):
+    g = _graph()
+    lat = {l.name: 0.005 for b in g.branches for l in b}
+    fe = ConstModel(lat)
+    fd = ConstModel({k: v * dev_slow for k, v in lat.items()})
+    plan = optimize(g, fe, fd, bw, slo)
+    if plan is None:
+        # verify truly infeasible: even exit 1 best partition exceeds slo
+        _, best = best_partition(g, 1, fe, fd, bw)
+        assert best > slo
+    else:
+        assert plan.latency_s <= slo + 1e-12
+        # no deeper exit is feasible (paper: maximize accuracy first)
+        for i in range(plan.exit_point + 1, g.num_exits + 1):
+            _, best = best_partition(g, i, fe, fd, bw)
+            assert best > slo
+
+
+@settings(max_examples=25, deadline=None)
+@given(bw1=st.floats(1e3, 1e8), factor=st.floats(1.1, 100.0))
+def test_property_latency_monotone_in_bandwidth(bw1, factor):
+    """For any fixed (exit, partition), latency is non-increasing in B."""
+    g = _graph()
+    lat = {l.name: 0.005 for b in g.branches for l in b}
+    fe, fd = ConstModel(lat), ConstModel({k: v * 20 for k, v in lat.items()})
+    bw2 = bw1 * factor
+    for i in range(1, g.num_exits + 1):
+        for p in range(0, len(g.branches[i - 1]) + 1, 3):
+            assert branch_latency(g, i, p, fe, fd, bw2) <= \
+                branch_latency(g, i, p, fe, fd, bw1) + 1e-12
+
+
+def test_search_under_1ms(alexnet_planner, alexnet_setup):
+    from repro.core.partitioner import search_latency
+    _, _, graph = alexnet_setup
+    t = search_latency(graph, alexnet_planner.f_edge, alexnet_planner.f_device,
+                       500 * 125, 1.0, repeats=20)
+    assert t < 0.005, f"Algorithm-1 search took {t*1e3:.2f} ms"  # paper: <1ms

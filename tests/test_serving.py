@@ -1,0 +1,73 @@
+"""Serving engine end-to-end (smoke scale) + scheduler units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import EdgentPlanner, lm_graph
+from repro.core.latency_model import RooflineLatencyModel
+from repro.data.bandwidth import dcn_trace
+from repro.models import Model
+from repro.serving import Request, ServingEngine
+from repro.serving.scheduler import SLOScheduler, pick_exit
+from repro.serving.tiers import Link
+
+
+def test_scheduler_edf_order():
+    s = SLOScheduler(batch_size=2)
+    s.submit(0, 5.0)
+    s.submit(1, 1.0)
+    s.submit(2, 3.0)
+    assert s.next_batch() == [1, 2]
+    assert s.next_batch() == [0]
+
+
+def test_pick_exit_demotion():
+    per_exit = [0.01, 0.02, 0.04]
+    assert pick_exit(1.0, per_exit, tokens_left=10, preferred=3) == 3
+    assert pick_exit(0.25, per_exit, tokens_left=10, preferred=3) == 2
+    assert pick_exit(0.05, per_exit, tokens_left=10, preferred=3) == 1
+    assert pick_exit(0.001, per_exit, tokens_left=10, preferred=3) == 1
+
+
+@pytest.fixture(scope="module")
+def engine_setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0), dtype=jnp.float32)
+    graph = lm_graph(cfg, batch=2, seq=1)
+    planner = EdgentPlanner(graph, latency_req_s=0.5)
+    planner.with_models(RooflineLatencyModel(chips=8, efficiency=0.4),
+                        RooflineLatencyModel(chips=1, efficiency=0.4))
+    return cfg, model, params, graph, planner
+
+
+def test_engine_serves_and_meets_slo(engine_setup):
+    cfg, model, params, graph, planner = engine_setup
+    link = Link(trace_bps=dcn_trace(0, 512))
+    eng = ServingEngine(model, params, graph, planner, link, batch_size=2,
+                        dtype=jnp.float32)
+    rs = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rs.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                    max_new_tokens=4, slo_s=0.5) for i in range(4)]
+    stats = eng.serve(reqs)
+    s = stats.summary()
+    assert s["requests"] == 4
+    assert s["slo_attainment"] > 0.5
+    assert all(len(t) == 4 for t in stats.tokens.values())
+    assert all(1 <= e <= model.num_segments for e in stats.exits)
+
+
+def test_engine_demotes_under_tight_slo(engine_setup):
+    cfg, model, params, graph, planner = engine_setup
+    link = Link(trace_bps=dcn_trace(0, 512))
+    eng = ServingEngine(model, params, graph, planner, link, batch_size=2,
+                        dtype=jnp.float32)
+    rs = np.random.default_rng(1)
+    tight = [Request(rid=i, prompt=rs.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                     max_new_tokens=4, slo_s=0.0) for i in range(2)]
+    stats = eng.serve(tight)
+    # infeasible SLO -> engine demotes to the earliest exit rather than hang
+    assert stats.summary()["mean_exit"] == 1.0
+    assert stats.summary()["slo_attainment"] == 0.0
