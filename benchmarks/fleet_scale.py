@@ -1,0 +1,96 @@
+"""Fleet-scale serving benchmark: SLO attainment vs. fleet size and router
+policy under a skewed diurnal workload on heterogeneous edges.
+
+Each cell is a deterministic virtual-time simulation (``repro.fleet``):
+N devices with independent bandwidth traces and per-device slowdowns, M
+edges with a 4x speed spread, continuous batching per edge, Edgent planning
+per device (shared plan cache).  The same seed always reproduces identical
+numbers — the benchmark re-runs one cell to prove it.
+
+Run:  PYTHONPATH=src python benchmarks/fleet_scale.py
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.fleet import FleetEngine, make_fleet, make_workload, smoke_lm_scenario
+
+ROUTERS = ("round-robin", "jsq", "bandwidth-aware")
+NUM_EDGES = 4
+RATE_PER_DEVICE_HZ = 1.2
+HORIZON_S = 30.0
+SEED = 2
+
+
+def run_cell(graph, planner, num_devices: int, router: str, *,
+             seed: int = SEED, rate_hz: float | None = None) -> dict:
+    topo = make_fleet(num_devices, NUM_EDGES, seed=seed, edge_capacity=8,
+                      lo_mbps=0.1, hi_mbps=6.0, max_edge_slowdown=4.0)
+    wl = make_workload(num_devices,
+                       rate_hz=rate_hz if rate_hz is not None
+                       else RATE_PER_DEVICE_HZ * num_devices,
+                       horizon_s=HORIZON_S, seed=seed + 1,
+                       arrival="diurnal", device_skew=1.0)
+    eng = FleetEngine(topo, graph, planner, router=router)
+    return eng.run(wl).summary()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=[100, 200, 400])
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+
+    _, graph, planner = smoke_lm_scenario()
+
+    print(f"fleet-scale serving: {NUM_EDGES} edges (speed 1x..4x), diurnal "
+          f"arrivals @ {RATE_PER_DEVICE_HZ}/device/s, horizon {HORIZON_S}s, "
+          f"seed {args.seed}")
+    print(f"\n{'devices':>8} | " +
+          " | ".join(f"{r:>16}" for r in ROUTERS) + " |   (SLO attainment)")
+    print("-" * (12 + 19 * len(ROUTERS)))
+    last, best_gap = {}, (None, -1.0)
+    for nd in args.sizes:
+        row = []
+        for router in ROUTERS:
+            t0 = time.perf_counter()
+            s = run_cell(graph, planner, nd, router, seed=args.seed)
+            row.append((router, s, time.perf_counter() - t0))
+            last[router] = s
+        rr_cell = row[0][1]["slo_attainment"]
+        for router, s, _ in row[1:]:
+            gap = s["slo_attainment"] - rr_cell
+            if gap > best_gap[1]:
+                best_gap = (f"{router} @ {nd} devices", gap)
+        print(f"{nd:>8} | " + " | ".join(
+            f"{s['slo_attainment']:>9.4f} {dt:5.1f}s" for _, s, dt in row) +
+            f" |   ({row[0][1]['requests']} requests)")
+
+    # ---- detail for the largest fleet
+    print("\nlargest fleet, per router:")
+    for router, s in last.items():
+        print(f"  {router:>16}: p50={s['p50_latency_s']*1e3:7.1f}ms "
+              f"p99={s['p99_latency_s']:6.2f}s "
+              f"queue_delay={s['mean_queue_delay_s']*1e3:7.1f}ms "
+              f"util={list(s['edge_utilization'].values())}")
+    print(f"  tenants (bandwidth-aware): {last['bandwidth-aware']['slo_by_tenant']}")
+    print(f"  exits: {last['bandwidth-aware']['exit_histogram']}  "
+          f"partitions: {last['bandwidth-aware']['partition_histogram']}")
+
+    # ---- determinism: same seed -> bit-identical summary
+    a = run_cell(graph, planner, args.sizes[0], "jsq", seed=args.seed)
+    b = run_cell(graph, planner, args.sizes[0], "jsq", seed=args.seed)
+    assert a == b, "same seed must reproduce identical metrics"
+    print("\ndeterminism check: identical summaries on re-run  [ok]")
+
+    print(f"largest gain over round-robin: {best_gap[0]} ({best_gap[1]:+.4f})")
+    if args.sizes == [100, 200, 400] and args.seed == SEED:
+        # the default configuration is a regression gate; custom sweeps may
+        # legitimately sit below the knee where routing policy matters
+        assert best_gap[1] > 0.02, \
+            "expected an adaptive policy to measurably beat round-robin"
+
+
+if __name__ == "__main__":
+    main()

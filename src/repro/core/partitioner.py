@@ -32,8 +32,12 @@ class CoInferencePlan:
 
 def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
                    f_edge, f_device, bandwidth_bps: float,
-                   edge_load: float = 1.0) -> float:
-    """A_{i,p} of Algorithm 1 (seconds).  ``bandwidth_bps`` in bytes/s."""
+                   edge_load: float = 1.0, device_load: float = 1.0) -> float:
+    """A_{i,p} of Algorithm 1 (seconds).  ``bandwidth_bps`` in bytes/s.
+
+    ``edge_load`` / ``device_load`` scale the respective tier's compute time;
+    the fleet simulator uses them for heterogeneous edges and per-device
+    slowdowns."""
     branch = graph.branches[exit_idx - 1]
     n = len(branch)
     t = 0.0
@@ -44,7 +48,7 @@ def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
         if j < p:
             t += f_edge.predict(layer) * edge_load
         else:
-            t += f_device.predict(layer)
+            t += f_device.predict(layer) * device_load
     return t
 
 

@@ -1,0 +1,110 @@
+"""Heterogeneous fleet topology: N device nodes x M edge nodes.
+
+Each :class:`DeviceNode` carries its own bandwidth trace (an independent
+draw from ``repro.data.bandwidth``) and a compute-slowdown factor; each
+:class:`EdgeNode` is a capacity-limited continuous-batching server with a
+speed factor (>1 = slower hardware), so a fleet can mix one beefy edge with
+several weak ones — the regime where routing policy matters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+from repro.data.bandwidth import belgium_lte_like, oboe_like_traces
+
+
+@dataclass
+class TraceLink:
+    """Time-indexed bandwidth trace (bytes/s), one per device.
+
+    Unlike ``serving.tiers.Link`` (stepped once per decode iteration of a
+    single engine), fleet links are read at *virtual timestamps* so that
+    concurrent edges observe a consistent bandwidth history."""
+    trace_bps: np.ndarray
+    dt_s: float = 1.0
+
+    def bw_at(self, t_s: float) -> float:
+        i = min(max(int(t_s / self.dt_s), 0), len(self.trace_bps) - 1)
+        return float(self.trace_bps[i])
+
+
+@dataclass
+class DeviceNode:
+    did: int
+    link: TraceLink
+    slowdown: float = 1.0        # device-tier compute multiplier (>=1 = slower)
+
+
+@dataclass
+class EdgeNode:
+    eid: int
+    capacity: int = 8            # concurrent decode slots (continuous-batch width)
+    speed: float = 1.0           # edge-tier compute multiplier (>=1 = slower)
+    # --- runtime state (owned by FleetEngine) ---
+    queue: list = field(default_factory=list)   # EDF heap: (deadline, seq, req)
+    active: list = field(default_factory=list)  # requests in the running batch
+    round_inflight: bool = False
+    busy_s: float = 0.0
+    ema_round_s: float = 0.0
+    completed: int = 0
+
+    def backlog(self) -> int:
+        return len(self.queue) + len(self.active)
+
+    def backlog_s(self) -> float:
+        """Crude pending-work estimate (seconds) for latency-aware routing:
+        queued + active requests amortized over the batch width, scaled by
+        the recent round time."""
+        per_round = self.ema_round_s if self.ema_round_s > 0 else 1e-3
+        return per_round * self.backlog() / max(self.capacity, 1)
+
+
+@dataclass
+class FleetTopology:
+    devices: List[DeviceNode]
+    edges: List[EdgeNode]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.edges)
+
+
+def make_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
+               trace: str = "oboe", edge_capacity: int = 8,
+               hetero_edges: bool = True, max_edge_slowdown: float = 3.0,
+               device_slowdown_range=(0.8, 2.5),
+               lo_mbps: float = 0.3, hi_mbps: float = 6.0,
+               trace_len: int = 600) -> FleetTopology:
+    """Sample a reproducible heterogeneous topology.
+
+    ``trace='oboe'`` gives each device an independent piecewise-stationary
+    trace (Sec. V-C statistics); ``trace='lte'`` cycles the five Belgium-LTE
+    mobility modes across devices."""
+    rng = np.random.default_rng(seed)
+    if trace == "oboe":
+        traces = oboe_like_traces(seed=seed, num=num_devices, chunks=trace_len,
+                                  lo_mbps=lo_mbps, hi_mbps=hi_mbps)
+    elif trace == "lte":
+        modes = ["foot", "bicycle", "bus", "train", "car"]
+        traces = [belgium_lte_like(seed=seed + i, length=trace_len,
+                                   transport=modes[i % len(modes)],
+                                   hi_mbps=hi_mbps)
+                  for i in range(num_devices)]
+    else:
+        raise ValueError(f"unknown trace kind: {trace!r}")
+    lo, hi = device_slowdown_range
+    devices = [DeviceNode(i, TraceLink(np.asarray(traces[i])),
+                          slowdown=float(rng.uniform(lo, hi)))
+               for i in range(num_devices)]
+    speeds = np.linspace(1.0, max_edge_slowdown, num_edges) if hetero_edges \
+        else np.ones(num_edges)
+    edges = [EdgeNode(j, capacity=edge_capacity, speed=float(speeds[j]))
+             for j in range(num_edges)]
+    return FleetTopology(devices, edges)

@@ -1,0 +1,226 @@
+"""Event-driven fleet engine: continuous batching per edge over a
+device x edge topology.
+
+Per arrival the router picks an edge; the edge holds an EDF queue and a
+running batch of up to ``capacity`` requests.  Decode proceeds in *rounds*
+(one token per active request per round): at each round boundary new
+requests are admitted into the running batch and finished ones retire —
+iteration-level continuous batching.  Round timing reuses the per-pair
+Edgent stack through :class:`~repro.serving.engine.CoInferenceStepper`
+(plan at the device's current bandwidth, per-exit step times, ``pick_exit``
+deadline demotion); the round lasts as long as its slowest member, i.e. the
+straggler defines the batch step.
+
+With ``model=None`` the engine is a pure virtual-time simulator (used by
+``benchmarks/fleet_scale.py`` at hundreds of devices).  With a real model +
+params it also runs the actual decode path per request (B=1 caches, the
+jitted per-exit variants shared fleet-wide via the stepper).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Union
+
+import numpy as np
+
+from repro.core.graph import InferenceGraph
+from repro.core.planner import EdgentPlanner
+from repro.fleet.cluster import EdgeNode, FleetTopology
+from repro.fleet.events import EventQueue
+from repro.fleet.metrics import FleetMetrics, RequestRecord
+from repro.fleet.router import Router, RoundRobinRouter, make_router
+from repro.fleet.workload import FleetRequest
+from repro.serving.engine import CoInferenceStepper
+
+
+class FleetEngine:
+    def __init__(self, topo: FleetTopology, graph: InferenceGraph,
+                 planner: EdgentPlanner, *,
+                 router: Union[Router, str, None] = None,
+                 model=None, params=None, dynamic: bool = False,
+                 dtype=None, demote_on_deadline: bool = True,
+                 prefill_div: int = 8):
+        self.topo = topo
+        self.model, self.params = model, params
+        self.dtype = dtype
+        self.demote = demote_on_deadline
+        self.prefill_div = prefill_div
+        # one stepper for the whole fleet: the plan cache and the compiled
+        # decode variants are shared across every device and edge
+        self.stepper = CoInferenceStepper(model, graph, planner,
+                                          dynamic=dynamic)
+        if router is None:
+            router = RoundRobinRouter()
+        elif isinstance(router, str):
+            router = make_router(router, stepper=self.stepper)
+        self.router = router
+
+    # ---------------------------------------------------------------- run
+    def run(self, workload: List[FleetRequest]) -> FleetMetrics:
+        evq = EventQueue()
+        metrics = FleetMetrics(num_edges=self.topo.num_edges)
+        self._qseq = 0
+        for edge in self.topo.edges:       # reset runtime state for reruns
+            edge.queue, edge.active = [], []
+            edge.round_inflight = False
+            edge.busy_s = edge.ema_round_s = 0.0
+            edge.completed = 0
+        for req in workload:               # same: a workload list is reusable
+            req.edge, req.admitted_s = -1, None
+            req.tokens_done, req.prefill_pending = 0, True
+            req.plan, req.exit_point = None, 0
+            req.cache, req.next_tok, req.tokens = None, None, []
+            evq.push(req.arrival_s, "arrival", req)
+        while evq:
+            ev = evq.pop()
+            if ev.kind == "arrival":
+                self._on_arrival(ev.payload, evq, metrics)
+            elif ev.kind == "round":
+                self._on_round_done(ev.payload, evq, metrics)
+            elif ev.kind == "local_done":
+                self._on_local_done(ev.payload, evq, metrics)
+        return metrics
+
+    # ---------------------------------------------------------------- events
+    def _on_arrival(self, req: FleetRequest, evq: EventQueue,
+                    metrics: FleetMetrics):
+        device = self.topo.devices[req.device]
+        bw = device.link.bw_at(evq.now)
+        req.plan = self.stepper.plan(bw)
+        if req.plan.partition == 0:
+            # Edgent chose device-only: the request never touches an edge
+            self._run_local(req, device, bw, evq)
+            return
+        edge = self.router.route(req, device, self.topo, evq.now)
+        req.edge = edge.eid
+        heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
+        self._qseq += 1
+        if not edge.round_inflight:
+            self._begin_round(edge, evq, metrics)
+
+    def _run_local(self, req: FleetRequest, device, bw: float,
+                   evq: EventQueue):
+        now = evq.now
+        req.admitted_s = now
+        per_exit = self.stepper.per_exit_times_cached(
+            0, bw, device_load=device.slowdown)
+        req.exit_point = self.stepper.choose_exit(
+            req.deadline_s - now, per_exit, req.max_new_tokens,
+            req.plan.exit_point) if self.demote else req.plan.exit_point
+        total = per_exit[req.exit_point - 1] * req.max_new_tokens + \
+            per_exit[req.plan.exit_point - 1] * \
+            max(1, req.prompt_len // self.prefill_div)
+        if self.model is not None:
+            self._prefill_real(req)
+            while req.tokens_done < req.max_new_tokens:
+                self._decode_real(req)
+                req.tokens_done += 1
+            req.cache = req.next_tok = None
+        evq.push(now + total, "local_done", req)
+
+    def _on_local_done(self, req: FleetRequest, evq: EventQueue,
+                       metrics: FleetMetrics):
+        now = evq.now
+        metrics.record(RequestRecord(
+            rid=req.rid, tenant=req.tenant, device=req.device, edge=-1,
+            arrival_s=req.arrival_s, finish_s=now,
+            latency_s=max(0.0, now - req.arrival_s), queue_delay_s=0.0,
+            met_slo=now <= req.deadline_s, exit_point=req.exit_point,
+            partition=0))
+
+    def _on_round_done(self, edge: EdgeNode, evq: EventQueue,
+                       metrics: FleetMetrics):
+        now = evq.now
+        still_active = []
+        for req in edge.active:
+            req.tokens_done += 1
+            if req.tokens_done >= req.max_new_tokens:
+                edge.completed += 1
+                metrics.record(RequestRecord(
+                    rid=req.rid, tenant=req.tenant, device=req.device,
+                    edge=edge.eid, arrival_s=req.arrival_s, finish_s=now,
+                    latency_s=max(0.0, now - req.arrival_s),
+                    queue_delay_s=max(0.0, (now if req.admitted_s is None
+                                            else req.admitted_s)
+                                      - req.arrival_s),
+                    met_slo=now <= req.deadline_s,
+                    exit_point=req.exit_point,
+                    partition=req.plan.partition))
+                req.cache = req.next_tok = None      # free decode state
+            else:
+                still_active.append(req)
+        edge.active = still_active
+        edge.round_inflight = False
+        self._begin_round(edge, evq, metrics)
+
+    # ---------------------------------------------------------------- rounds
+    def _begin_round(self, edge: EdgeNode, evq: EventQueue,
+                     metrics: FleetMetrics):
+        now = evq.now
+        # admit in EDF order up to the batch width (continuous batching:
+        # this happens at every round boundary, not at batch completion)
+        while edge.queue and len(edge.active) < edge.capacity:
+            _, _, req = heapq.heappop(edge.queue)
+            if req.admitted_s is None:
+                req.admitted_s = now
+            if self.model is not None:
+                self._prefill_real(req)
+            edge.active.append(req)
+        if not edge.active:
+            return
+        round_dt = 0.0
+        for req in edge.active:
+            device = self.topo.devices[req.device]
+            bw = device.link.bw_at(now)
+            if req.plan is None:
+                req.plan = self.stepper.plan(bw)
+            per_exit = self.stepper.per_exit_times_cached(
+                req.plan.partition, bw, edge_load=edge.speed,
+                device_load=device.slowdown, include_input=False)
+            tokens_left = req.max_new_tokens - req.tokens_done
+            if self.demote:
+                req.exit_point = self.stepper.choose_exit(
+                    req.deadline_s - now, per_exit, tokens_left,
+                    req.plan.exit_point)
+            else:
+                req.exit_point = req.plan.exit_point
+            t_step = per_exit[req.exit_point - 1]
+            if req.prefill_pending:
+                # input payload ships once, then prompt_len/8 prefill steps
+                t_step += self.stepper.input_time(req.plan.partition, bw) + \
+                    per_exit[req.plan.exit_point - 1] * \
+                    max(1, req.prompt_len // self.prefill_div)
+                req.prefill_pending = False
+            if self.model is not None:
+                self._decode_real(req)
+            round_dt = max(round_dt, t_step)
+        edge.busy_s += round_dt
+        metrics.add_busy(edge.eid, round_dt)
+        edge.ema_round_s = round_dt if edge.ema_round_s == 0.0 else \
+            0.8 * edge.ema_round_s + 0.2 * round_dt
+        edge.round_inflight = True
+        evq.push(now + round_dt, "round", edge)
+
+    # ---------------------------------------------------------------- real decode
+    def _prefill_real(self, req: FleetRequest):
+        import jax.numpy as jnp
+        assert req.prompt is not None, \
+            "real-decode fleet needs prompts (make_workload(vocab_size=...))"
+        dtype = self.dtype if self.dtype is not None else jnp.float32
+        toks = jnp.asarray(req.prompt[None, :])
+        cache = self.model.init_cache(
+            1, req.prompt_len + req.max_new_tokens + 1, dtype=dtype,
+            enc_len=req.prompt_len)
+        h, cache = self.model.prefill(self.params, toks, cache)
+        logits = self.model.logits(self.params, h)
+        req.next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        req.cache = cache
+
+    def _decode_real(self, req: FleetRequest):
+        import jax.numpy as jnp
+        fn = self.stepper.decode_fn(req.exit_point)
+        pos = jnp.asarray(req.prompt_len + req.tokens_done, jnp.int32)
+        h, req.cache = fn(self.params, req.cache, req.next_tok, pos)
+        logits = self.model.logits(self.params, h)
+        req.next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+        req.tokens.append(int(req.next_tok[0, 0]))

@@ -1,0 +1,45 @@
+"""Virtual-clock discrete-event core of the fleet simulator.
+
+A single binary heap orders :class:`Event`s by ``(time, seq)``; the ``seq``
+counter breaks ties deterministically (FIFO among simultaneous events), so a
+fixed seed always replays the identical schedule regardless of host speed.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, List
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+class EventQueue:
+    """Min-heap of events + the simulator's virtual clock (``now``)."""
+
+    def __init__(self):
+        self._heap: List[Event] = []
+        self._seq = 0
+        self.now = 0.0
+
+    def push(self, time_s: float, kind: str, payload: Any = None) -> Event:
+        ev = Event(time_s, self._seq, kind, payload)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        ev = heapq.heappop(self._heap)
+        self.now = ev.time
+        return ev
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,74 @@
+"""Fleet-level observability: per-request records -> aggregate summary.
+
+Everything is computed from plain floats recorded during the event loop, so
+two runs with the same seed produce bit-identical summaries (the determinism
+contract the tests assert).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclass
+class RequestRecord:
+    rid: int
+    tenant: str
+    device: int
+    edge: int
+    arrival_s: float
+    finish_s: float
+    latency_s: float
+    queue_delay_s: float
+    met_slo: bool
+    exit_point: int
+    partition: int
+
+
+@dataclass
+class FleetMetrics:
+    num_edges: int
+    records: List[RequestRecord] = field(default_factory=list)
+    edge_busy_s: Dict[int, float] = field(default_factory=dict)
+    horizon_s: float = 0.0
+
+    def record(self, rec: RequestRecord):
+        self.records.append(rec)
+        self.horizon_s = max(self.horizon_s, rec.finish_s)
+
+    def add_busy(self, eid: int, dt_s: float):
+        self.edge_busy_s[eid] = self.edge_busy_s.get(eid, 0.0) + dt_s
+
+    # ------------------------------------------------------------ summaries
+    def summary(self) -> Dict:
+        if not self.records:
+            return {"requests": 0, "slo_attainment": 0.0}
+        lat = np.array([r.latency_s for r in self.records])
+        met = np.array([r.met_slo for r in self.records])
+        qd = np.array([r.queue_delay_s for r in self.records])
+        horizon = max(self.horizon_s, 1e-9)
+        util = {eid: round(self.edge_busy_s.get(eid, 0.0) / horizon, 6)
+                for eid in range(self.num_edges)}
+        exits: Dict[int, int] = {}
+        parts: Dict[int, int] = {}
+        per_tenant: Dict[str, List[bool]] = {}
+        for r in self.records:
+            exits[r.exit_point] = exits.get(r.exit_point, 0) + 1
+            parts[r.partition] = parts.get(r.partition, 0) + 1
+            per_tenant.setdefault(r.tenant, []).append(r.met_slo)
+        return {
+            "requests": len(self.records),
+            "slo_attainment": float(np.mean(met)),
+            "p50_latency_s": float(np.percentile(lat, 50)),
+            "p95_latency_s": float(np.percentile(lat, 95)),
+            "p99_latency_s": float(np.percentile(lat, 99)),
+            "mean_queue_delay_s": float(np.mean(qd)),
+            "makespan_s": float(self.horizon_s),
+            "edge_utilization": util,
+            "slo_by_tenant": {k: float(np.mean(v))
+                              for k, v in sorted(per_tenant.items())},
+            "exit_histogram": dict(sorted(exits.items())),
+            "partition_histogram": dict(sorted(parts.items())),
+        }

@@ -1,0 +1,79 @@
+"""Pluggable device->edge routing policies.
+
+The router answers one question per arrival: which edge should co-serve this
+device's request?  Policies range from oblivious (round-robin) to
+queue-aware (join-shortest-queue) to bandwidth/latency-aware — the latter
+consults the device's Edgent plan at its *current* bandwidth plus each
+edge's speed and backlog, i.e. partition decisions inform placement (the
+joint view of arXiv:2310.12937).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
+
+
+class Router:
+    name = "base"
+
+    def route(self, req, device: DeviceNode, topo: FleetTopology,
+              now: float) -> EdgeNode:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    """Oblivious: cycle through the edges in id order."""
+    name = "round-robin"
+
+    def __init__(self):
+        self._next = 0
+
+    def route(self, req, device, topo, now) -> EdgeNode:
+        edge = topo.edges[self._next % topo.num_edges]
+        self._next += 1
+        return edge
+
+
+class JoinShortestQueueRouter(Router):
+    """Pick the edge with the fewest queued + in-flight requests
+    (deterministic tie-break on edge id)."""
+    name = "jsq"
+
+    def route(self, req, device, topo, now) -> EdgeNode:
+        return min(topo.edges, key=lambda e: (e.backlog(), e.eid))
+
+
+class BandwidthAwareRouter(Router):
+    """Latency-aware: estimated completion = edge backlog + the Edgent
+    planner's predicted co-inference latency at the device's current
+    bandwidth on that edge's hardware (``edge.speed``).  Requires a
+    :class:`~repro.serving.engine.CoInferenceStepper` for plan lookups (its
+    plan cache is shared with the fleet engine)."""
+    name = "bandwidth-aware"
+
+    def __init__(self, stepper):
+        self.stepper = stepper
+
+    def route(self, req, device, topo, now) -> EdgeNode:
+        bw = device.link.bw_at(now)
+        plan = self.stepper.plan(bw)
+
+        def est(edge: EdgeNode) -> float:
+            step = self.stepper.per_exit_times_cached(
+                plan.partition, bw, edge_load=edge.speed,
+                device_load=device.slowdown)[plan.exit_point - 1]
+            return edge.backlog_s() + step * req.max_new_tokens
+
+        return min(topo.edges, key=lambda e: (est(e), e.eid))
+
+
+def make_router(name: str, stepper=None) -> Router:
+    if name in ("rr", "round-robin"):
+        return RoundRobinRouter()
+    if name in ("jsq", "join-shortest-queue"):
+        return JoinShortestQueueRouter()
+    if name in ("bw", "bandwidth", "bandwidth-aware"):
+        assert stepper is not None, "bandwidth-aware routing needs a stepper"
+        return BandwidthAwareRouter(stepper)
+    raise ValueError(f"unknown router: {name!r}")

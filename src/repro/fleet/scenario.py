@@ -1,0 +1,46 @@
+"""Canonical fleet scenario: a smoke-scale LM graph with paper-anchored
+tier speeds.
+
+The roofline predictors are rescaled so one device-only decode step costs
+``device_step_s`` and one edge step ``edge_step_s`` (Fig. 2 asymmetry at
+per-token granularity), and the input payload is set to a multimodal-style
+prompt (image features shipped from the device) so the partition decision
+genuinely trades bandwidth against tier compute: low-bandwidth devices plan
+device-only, well-connected ones offload.  Used by ``benchmarks/
+fleet_scale.py``, ``examples/serve_fleet.py``, and ``tests/test_fleet.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.configs import get_smoke_config
+from repro.core import EdgentPlanner, lm_graph
+from repro.core.latency_model import RooflineLatencyModel, ScaledLatencyModel
+
+
+def smoke_lm_scenario(arch: str = "llama3.2-1b", *,
+                      latency_req_s: float = 0.5,
+                      input_kb: float = 24.0,
+                      device_step_s: float = 0.06,
+                      edge_step_s: float = 0.004,
+                      with_model: bool = False):
+    """Build (cfg, graph, planner[, model, params]) for fleet experiments."""
+    cfg = get_smoke_config(arch)
+    graph = lm_graph(cfg, batch=1, seq=1)
+    graph.input_bytes = int(input_kb * 1024)
+    edge = RooflineLatencyModel(chips=8, efficiency=0.4)
+    dev = RooflineLatencyModel(chips=1, efficiency=0.4)
+    full = graph.branches[-1]
+    k_edge = edge_step_s / sum(edge.predict(l) for l in full)
+    k_dev = device_step_s / sum(dev.predict(l) for l in full)
+    planner = EdgentPlanner(graph, latency_req_s=latency_req_s)
+    planner.with_models(ScaledLatencyModel(edge, k_edge),
+                        ScaledLatencyModel(dev, k_dev))
+    if not with_model:
+        return cfg, graph, planner
+    import jax
+    import jax.numpy as jnp
+    from repro.models import Model
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0), dtype=jnp.float32)
+    return cfg, graph, planner, model, params

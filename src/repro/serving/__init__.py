@@ -1,1 +1,2 @@
-from repro.serving.engine import Request, ServingEngine, ServeStats  # noqa: F401
+from repro.serving.engine import (CoInferenceStepper, Request, ServeStats,  # noqa: F401
+                                  ServingEngine, quantize_bw)

@@ -8,12 +8,18 @@ bandwidth (static Algorithm 1 or dynamic Algorithm 3), obtaining the
 segment), virtual time is billed per tier + link, and deadline demotion
 rescues batches that fall behind.
 
+The plan -> decode -> demote step lives in :class:`CoInferenceStepper`, a
+reusable unit shared with the fleet simulator (``repro.fleet.engine``): it
+owns the per-exit jit cache and an optional plan cache keyed on quantized
+bandwidth state, so many devices that observe the same bandwidth state reuse
+one Algorithm-1 search result.
+
 Token values come from real model execution (smoke-scale on CPU); timing
 comes from the latency models — deterministic and host-independent.
 """
 from __future__ import annotations
 
-import time
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -22,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import InferenceGraph
-from repro.core.partitioner import branch_latency
+from repro.core.partitioner import CoInferencePlan, branch_latency
 from repro.core.planner import EdgentPlanner
 from repro.models.api import Model
 from repro.serving.scheduler import SLOScheduler, pick_exit
@@ -37,6 +43,10 @@ class Request:
     slo_s: float
     arrival_s: float = 0.0
 
+    @property
+    def deadline_s(self) -> float:
+        return self.arrival_s + self.slo_s
+
 
 @dataclass
 class ServeStats:
@@ -45,6 +55,7 @@ class ServeStats:
     exits: List[int] = field(default_factory=list)
     partitions: List[int] = field(default_factory=list)
     throughputs: List[float] = field(default_factory=list)
+    queue_delays: List[float] = field(default_factory=list)
     tokens: Dict[int, List[int]] = field(default_factory=dict)
 
     def summary(self) -> Dict[str, float]:
@@ -55,7 +66,123 @@ class ServeStats:
             "slo_attainment": float(np.mean(self.met_slo)) if self.met_slo else 0.0,
             "mean_exit": float(np.mean(self.exits)) if self.exits else 0.0,
             "mean_throughput_tps": float(np.mean(self.throughputs)) if self.throughputs else 0.0,
+            "mean_queue_delay_s": float(np.mean(self.queue_delays)) if self.queue_delays else 0.0,
         }
+
+
+def quantize_bw(bw_bps: float, sig_figs: int = 3) -> float:
+    """Round a bandwidth observation to ``sig_figs`` significant figures —
+    the plan-cache key: devices in the same (quantized) bandwidth state share
+    one Algorithm-1/2 search result."""
+    if bw_bps <= 0.0:
+        return 0.0
+    mag = 10.0 ** (math.floor(math.log10(bw_bps)) - sig_figs + 1)
+    return round(bw_bps / mag) * mag
+
+
+class CoInferenceStepper:
+    """Reusable plan -> decode -> demote unit.
+
+    Shared by :class:`ServingEngine` (one device-edge pair) and
+    ``repro.fleet.engine.FleetEngine`` (many pairs): holds the compiled
+    per-exit decode variants and a plan cache shared across callers.
+    ``model`` may be ``None`` for timing-only simulation (no real decode).
+    """
+
+    def __init__(self, model: Optional[Model], graph: InferenceGraph,
+                 planner: EdgentPlanner, *, dynamic: bool = False,
+                 plan_cache: Optional[Dict[float, CoInferencePlan]] = None):
+        self.model, self.graph, self.planner = model, graph, planner
+        self.dynamic = dynamic
+        self.plan_cache: Dict[float, CoInferencePlan] = \
+            plan_cache if plan_cache is not None else {}
+        self._step_cache: Dict[tuple, List[float]] = {}
+        self._decode_jit: Dict[Optional[int], object] = {}
+        self.n_graph = graph.num_exits
+        self.n_model = model.num_segments if model is not None else graph.num_exits
+        self.exit_points = list(range(1, self.n_graph + 1))
+
+    # ------------------------------------------------------------ planning
+    def plan(self, bw_bps: float) -> CoInferencePlan:
+        """Online tuning at the current bandwidth.  Static plans are cached
+        by quantized bandwidth state; the dynamic optimizer is stateful
+        (BOCD) so it is always consulted directly."""
+        if self.dynamic:
+            return self.planner.plan(bw_bps, dynamic=True)
+        key = quantize_bw(bw_bps)
+        plan = self.plan_cache.get(key)
+        if plan is None:
+            plan = self.plan_cache[key] = self.planner.plan(bw_bps)
+        return plan
+
+    # ------------------------------------------------------------ timing
+    def step_time(self, exit_point: int, partition: int, bw_bps: float, *,
+                  edge_load: float = 1.0, device_load: float = 1.0,
+                  include_input: bool = True) -> float:
+        """Virtual per-token latency of (exit, partition) at bandwidth bw.
+
+        ``include_input=False`` drops the input-uplink term (paid once at
+        prefill, not per decode token) — the fleet engine bills it that way
+        so queueing delay stays honest."""
+        t = branch_latency(self.graph, exit_point, partition,
+                           self.planner.f_edge, self.planner.f_device,
+                           bw_bps, edge_load=edge_load,
+                           device_load=device_load)
+        if not include_input and partition > 0:
+            t -= self.graph.input_bytes / bw_bps
+        return t
+
+    def per_exit_times(self, partition: int, bw_bps: float, *,
+                       edge_load: float = 1.0, device_load: float = 1.0,
+                       include_input: bool = True) -> List[float]:
+        return [self.step_time(e, partition, bw_bps, edge_load=edge_load,
+                               device_load=device_load,
+                               include_input=include_input)
+                for e in self.exit_points]
+
+    def input_time(self, partition: int, bw_bps: float) -> float:
+        """One-shot input uplink cost (zero for device-only plans)."""
+        return self.graph.input_bytes / bw_bps if partition > 0 else 0.0
+
+    def per_exit_times_cached(self, partition: int, bw_bps: float, *,
+                              edge_load: float = 1.0,
+                              device_load: float = 1.0,
+                              include_input: bool = True) -> List[float]:
+        """Memoized :meth:`per_exit_times` at quantized bandwidth — the fleet
+        hot path: all inputs are piecewise-constant (traces change on a 1 s
+        grid, loads are fixed per node), so devices in the same bandwidth
+        state share one evaluation."""
+        qbw = quantize_bw(bw_bps)
+        key = (partition, qbw, edge_load, device_load, include_input)
+        hit = self._step_cache.get(key)
+        if hit is None:
+            hit = self._step_cache[key] = self.per_exit_times(
+                partition, qbw, edge_load=edge_load,
+                device_load=device_load, include_input=include_input)
+        return hit
+
+    def choose_exit(self, remaining_s: float, per_exit: List[float],
+                    tokens_left: int, preferred: int) -> int:
+        """Deadline demotion (``pick_exit``) against the remaining budget."""
+        return pick_exit(remaining_s, per_exit, tokens_left, preferred)
+
+    # ------------------------------------------------------------ decode path
+    def to_model_exit(self, graph_exit: int) -> int:
+        # the planner's graph may describe the FULL-size architecture while
+        # the executing model is the reduced config: map exit points
+        # proportionally (graph exit i -> model segment)
+        return max(1, round(graph_exit * self.n_model / self.n_graph))
+
+    def decode_fn(self, graph_exit: Optional[int]):
+        assert self.model is not None, "timing-only stepper has no decode path"
+        mexit = None if graph_exit is None else self.to_model_exit(graph_exit)
+        if mexit not in self._decode_jit:
+            ep = None if mexit is None or mexit >= self.n_model else mexit - 1
+            fn = jax.jit(
+                lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
+                                                            exit_point=ep)[:2])
+            self._decode_jit[mexit] = fn
+        return self._decode_jit[mexit]
 
 
 class ServingEngine:
@@ -70,47 +197,27 @@ class ServingEngine:
         self.dynamic = dynamic
         self.demote = demote_on_deadline
         self.sched = SLOScheduler(batch_size)
-        self._decode_jit: Dict[Optional[int], object] = {}
-        # the planner's graph may describe the FULL-size architecture while
-        # the executing model is the reduced config: map exit points
-        # proportionally (graph exit i -> model segment)
-        self.n_graph = graph.num_exits
-        self.n_model = model.num_segments
-        self._exit_points = list(range(1, self.n_graph + 1))
-
-    # ------------------------------------------------------------ timing
-    def _step_time(self, exit_point: int, partition: int, bw: float) -> float:
-        """Virtual per-token latency of (exit, partition) at bandwidth bw."""
-        return branch_latency(self.graph, exit_point, partition,
-                              self.planner.f_edge, self.planner.f_device, bw)
-
-    def _to_model_exit(self, graph_exit: int) -> int:
-        return max(1, round(graph_exit * self.n_model / self.n_graph))
-
-    # ------------------------------------------------------------ compiled steps
-    def _decode_fn(self, graph_exit: Optional[int]):
-        mexit = None if graph_exit is None else self._to_model_exit(graph_exit)
-        if mexit not in self._decode_jit:
-            ep = None if mexit is None or mexit >= self.n_model else mexit - 1
-            fn = jax.jit(
-                lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
-                                                            exit_point=ep)[:2])
-            self._decode_jit[mexit] = fn
-        return self._decode_jit[mexit]
+        self.stepper = CoInferenceStepper(model, graph, planner,
+                                          dynamic=dynamic)
 
     # ------------------------------------------------------------ serve
     def serve(self, requests: List[Request]) -> ServeStats:
         stats = ServeStats()
         for r in requests:
-            self.sched.submit(r.rid, r.arrival_s + r.slo_s)
+            self.sched.submit(r.rid, r.deadline_s, r.arrival_s)
         reqs = {r.rid: r for r in requests}
+        now = 0.0
         while len(self.sched):
-            batch_ids = self.sched.next_batch()
+            batch_ids = self.sched.next_batch(now)
+            if not batch_ids:           # idle until the next arrival
+                now = self.sched.earliest_arrival()
+                continue
             batch = [reqs[i] for i in batch_ids]
-            self._serve_batch(batch, stats)
+            now = self._serve_batch(batch, stats, now)
         return stats
 
-    def _serve_batch(self, batch: List[Request], stats: ServeStats):
+    def _serve_batch(self, batch: List[Request], stats: ServeStats,
+                     start_s: float = 0.0) -> float:
         B = len(batch)
         prompt_len = max(len(r.prompt) for r in batch)
         toks = np.zeros((B, prompt_len), np.int32)
@@ -121,26 +228,27 @@ class ServingEngine:
                                       dtype=self.dtype, enc_len=prompt_len)
         # ---- plan at batch start
         bw = self.link.current()
-        plan = self.planner.plan(bw, dynamic=self.dynamic)
-        clock = 0.0
+        plan = self.stepper.plan(bw)
+        clock = start_s
         # prefill (virtual time: prefill ~ prompt_len * step cost; value: real)
         h, cache = self.model.prefill(self.params, jnp.asarray(toks), cache)
-        clock += self._step_time(plan.exit_point, plan.partition, bw) * \
+        clock += self.stepper.step_time(plan.exit_point, plan.partition, bw) * \
             max(1, prompt_len // 8)
         logits = self.model.logits(self.params, h)
         next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
         out_tokens = [[] for _ in range(B)]
-        budget = min(r.slo_s for r in batch)
+        # each request's own deadline includes the time it already spent
+        # queued: the batch budget is the earliest deadline in absolute time
+        budget = min(r.deadline_s for r in batch)
         exit_point = plan.exit_point
         for step in range(max_new):
             bw = self.link.current()
             if self.demote:
-                per_exit = [self._step_time(e, plan.partition, bw)
-                            for e in self._exit_points]
-                exit_point = pick_exit(budget - clock, per_exit,
-                                       max_new - step, plan.exit_point)
-            t_step = self._step_time(exit_point, plan.partition, bw)
-            fn = self._decode_fn(exit_point)
+                per_exit = self.stepper.per_exit_times(plan.partition, bw)
+                exit_point = self.stepper.choose_exit(
+                    budget - clock, per_exit, max_new - step, plan.exit_point)
+            t_step = self.stepper.step_time(exit_point, plan.partition, bw)
+            fn = self.stepper.decode_fn(exit_point)
             pos = jnp.asarray(prompt_len + step, jnp.int32)
             h, cache = fn(self.params, cache, next_tok, pos)
             logits = self.model.logits(self.params, h)
@@ -151,9 +259,11 @@ class ServingEngine:
             clock += t_step
             self.link.advance()
         for i, r in enumerate(batch):
-            stats.latencies.append(clock)
-            stats.met_slo.append(clock <= r.slo_s)
+            stats.latencies.append(max(0.0, clock - r.arrival_s))
+            stats.met_slo.append(clock <= r.deadline_s)
             stats.exits.append(exit_point)
             stats.partitions.append(plan.partition)
-            stats.throughputs.append(max_new / max(clock, 1e-9))
+            stats.throughputs.append(max_new / max(clock - start_s, 1e-9))
+            stats.queue_delays.append(max(0.0, start_s - r.arrival_s))
             stats.tokens[r.rid] = out_tokens[i]
+        return clock

@@ -16,6 +16,7 @@ from typing import List, Optional
 class _Queued:
     deadline: float
     idx: int = field(compare=False)
+    arrival_s: float = field(compare=False, default=0.0)
 
 
 class SLOScheduler:
@@ -25,14 +26,28 @@ class SLOScheduler:
         self.batch_size = batch_size
         self.heap: List[_Queued] = []
 
-    def submit(self, idx: int, deadline: float):
-        heapq.heappush(self.heap, _Queued(deadline, idx))
+    def submit(self, idx: int, deadline: float, arrival_s: float = 0.0):
+        heapq.heappush(self.heap, _Queued(deadline, idx, arrival_s))
 
-    def next_batch(self) -> List[int]:
-        out = []
-        while self.heap and len(out) < self.batch_size:
-            out.append(heapq.heappop(self.heap).idx)
-        return out
+    def next_batch(self, now: Optional[float] = None) -> List[int]:
+        """EDF batch.  With ``now`` given, only requests that have already
+        arrived are admitted — a future request must not hold up an arrived
+        one (empty result => nothing has arrived yet; see
+        :meth:`earliest_arrival`)."""
+        if now is None:
+            out = []
+            while self.heap and len(out) < self.batch_size:
+                out.append(heapq.heappop(self.heap).idx)
+            return out
+        arrived = sorted(q for q in self.heap if q.arrival_s <= now)
+        take = arrived[: self.batch_size]
+        for q in take:
+            self.heap.remove(q)
+        heapq.heapify(self.heap)
+        return [q.idx for q in take]
+
+    def earliest_arrival(self) -> float:
+        return min(q.arrival_s for q in self.heap)
 
     def __len__(self):
         return len(self.heap)

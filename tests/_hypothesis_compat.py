@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim for the property tests.
+
+When hypothesis is installed (CI does this), re-export the real API.  When
+it is not, export stand-ins: ``@given`` replaces the test with a skipped
+zero-arg stub so the module still collects and its non-property tests run.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """st.<anything>(...) placeholder; values are never drawn."""
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

@@ -15,20 +15,20 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs import get_smoke_config
 from repro.config import ShapeConfig
 from repro.models import Model
+from repro.launch.mesh import mesh_axis_kwargs
 from repro.launch.steps import make_step
 from repro.launch.dryrun import collective_stats
 
 arch, kind, multipod = "%(arch)s", "%(kind)s", %(multipod)s
 if multipod:
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+                         **mesh_axis_kwargs(3))
 else:
     mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **mesh_axis_kwargs(2))
 cfg = get_smoke_config(arch)
 model = Model(cfg)
 shape = ShapeConfig("t", 64, 8, kind)
@@ -37,6 +37,8 @@ with mesh:
     lowered = step.lower(*abstract_inputs())
 compiled = lowered.compile()
 ca = compiled.cost_analysis()
+if isinstance(ca, list):               # older jax: list of per-device dicts
+    ca = ca[0] if ca else {}
 coll = collective_stats(compiled.as_text())
 print(json.dumps({"flops": ca.get("flops", 0.0),
                   "coll": coll["total_link_bytes"],

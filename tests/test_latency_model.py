@@ -1,7 +1,7 @@
 """Table-I regression predictors + roofline predictor."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # hypothesis or skip-stub
 
 from repro.core.graph import GraphLayer
 from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,
