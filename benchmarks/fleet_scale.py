@@ -36,11 +36,64 @@ def run_cell(graph, planner, num_devices: int, router: str, *,
     return eng.run(wl).summary()
 
 
+def run_coop(args):
+    """--coop: cooperative multi-edge joint planning vs single-edge
+    bandwidth-aware routing, SLO attainment per fleet size.  The acceptance
+    gate: joint >= bandwidth-aware at 100 devices on the default seed."""
+    _, graph, planner = smoke_lm_scenario()
+    sizes = [40] if args.smoke else args.sizes
+    routers = ("bandwidth-aware", "joint")
+    print(f"cooperative multi-edge planning: {NUM_EDGES} edges (speed "
+          f"1x..4x), diurnal arrivals @ {RATE_PER_DEVICE_HZ}/device/s, "
+          f"horizon {HORIZON_S}s, seed {args.seed}")
+    print(f"\n{'devices':>8} | " +
+          " | ".join(f"{r:>16}" for r in routers) +
+          " |     coop share    (SLO attainment)")
+    print("-" * (16 + 19 * len(routers) + 16))
+    gate = None
+    for nd in sizes:
+        row = {}
+        for router in routers:
+            t0 = time.perf_counter()
+            row[router] = (run_cell(graph, planner, nd, router,
+                                    seed=args.seed),
+                           time.perf_counter() - t0)
+        joint = row["joint"][0]
+        share = joint["coop_requests"] / max(joint["requests"], 1)
+        print(f"{nd:>8} | " + " | ".join(
+            f"{row[r][0]['slo_attainment']:>9.4f} {row[r][1]:5.1f}s"
+            for r in routers) +
+            f" |   {share:>6.3f}  ({joint['requests']} requests, "
+            f"{joint['backbone_mb']:.3f} MB backbone)")
+        if nd == 100:
+            gate = (row["bandwidth-aware"][0]["slo_attainment"],
+                    joint["slo_attainment"])
+
+    # ---- determinism: same seed -> bit-identical summary
+    a = run_cell(graph, planner, sizes[0], "joint", seed=args.seed)
+    b = run_cell(graph, planner, sizes[0], "joint", seed=args.seed)
+    assert a == b, "same seed must reproduce identical metrics"
+    print("\ndeterminism check: identical summaries on re-run  [ok]")
+    if gate is not None and args.seed == SEED:
+        bw_slo, joint_slo = gate
+        print(f"joint vs bandwidth-aware @ 100 devices: "
+              f"{joint_slo:.4f} vs {bw_slo:.4f} ({joint_slo - bw_slo:+.4f})")
+        assert joint_slo >= bw_slo, \
+            "joint multi-edge planning must not lose to single-edge routing"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+", default=[100, 200, 400])
     ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--coop", action="store_true",
+                    help="joint multi-edge planning vs bandwidth-aware")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet only (CI artifact)")
     args = ap.parse_args()
+    if args.coop:
+        run_coop(args)
+        return
 
     _, graph, planner = smoke_lm_scenario()
 

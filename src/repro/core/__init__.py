@@ -3,5 +3,7 @@
 from repro.core.graph import GraphLayer, InferenceGraph, alexnet_graph, lm_graph  # noqa: F401
 from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,  # noqa: F401
                                       RooflineLatencyModel, ScaledLatencyModel)
-from repro.core.partitioner import CoInferencePlan, optimize, optimize_with_fallback  # noqa: F401
+from repro.core.partitioner import (CoInferencePlan, multi_branch_latency,  # noqa: F401
+                                    optimize, optimize_multi,
+                                    optimize_with_fallback, proportional_cuts)
 from repro.core.planner import EdgentPlanner  # noqa: F401

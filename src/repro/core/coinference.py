@@ -29,15 +29,21 @@ class CoInferenceResult:
     transfer_s: float
     exit_point: int
     partition: int
+    hops_s: float = 0.0       # inter-edge backbone transfer (k-cut plans)
 
 
 @dataclass
 class TwoTierExecutor:
+    """Executes 1-cut plans on (edge, device) and k-cut plans on an ordered
+    chain of edge tiers (``edge_slowdowns``, one per span) with inter-edge
+    hand-offs billed at ``edge_bw_bps``."""
     graph: InferenceGraph
     params: Any
     bandwidth_bps: float
     device_slowdown: float = 20.0
     edge_slowdown: float = 1.0
+    edge_slowdowns: Optional[List[float]] = None   # per-span, k-cut plans
+    edge_bw_bps: float = 1e9                       # edge<->edge backbone
 
     def _run_layers(self, layers, x, slowdown: float):
         total = 0.0
@@ -61,9 +67,21 @@ class TwoTierExecutor:
         if p > 0:
             transfer += self.graph.input_bytes / bw
             transfer += self.graph.cut_bytes(plan.exit_point, p) / bw
-        x_edge, t_edge = self._run_layers(branch[:p], x, self.edge_slowdown)
+        cuts = plan.all_cuts
+        slowdowns = self.edge_slowdowns if self.edge_slowdowns is not None \
+            else [self.edge_slowdown] * len(cuts)
+        x_edge, t_edge, hops = x, 0.0, 0.0
+        start = 0
+        for i, cut in enumerate(cuts):
+            span = branch[start:min(cut, len(branch))]
+            x_edge, dt = self._run_layers(span, x_edge, slowdowns[i])
+            t_edge += dt
+            if i < len(cuts) - 1:
+                hops += self.graph.cut_bytes(plan.exit_point, cut) / \
+                    self.edge_bw_bps
+            start = cut
         out, t_dev = self._run_layers(branch[p:], x_edge, self.device_slowdown)
         return CoInferenceResult(
-            output=out, latency_s=t_edge + t_dev + transfer,
+            output=out, latency_s=t_edge + t_dev + transfer + hops,
             edge_s=t_edge, device_s=t_dev, transfer_s=transfer,
-            exit_point=plan.exit_point, partition=p)
+            exit_point=plan.exit_point, partition=p, hops_s=hops)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.graph import InferenceGraph
 
@@ -24,10 +24,19 @@ from repro.core.graph import InferenceGraph
 @dataclass
 class CoInferencePlan:
     exit_point: int        # 1-based (paper numbering; num_exits = full model)
-    partition: int         # layers on the edge tier
+    partition: int         # layers on the edge tier (total, across all cuts)
     latency_s: float       # predicted end-to-end latency
     accuracy: float
     feasible: bool = True
+    # k-cut generalization (CoEdge-style multi-edge spans): ascending cut
+    # points over the edge portion, last == partition.  Empty == legacy
+    # single-cut plan (one edge owns [0, partition)).
+    cuts: tuple = ()
+
+    @property
+    def all_cuts(self) -> tuple:
+        return self.cuts if self.cuts else ((self.partition,)
+                                            if self.partition > 0 else ())
 
 
 def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
@@ -50,6 +59,124 @@ def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
         else:
             t += f_device.predict(layer) * device_load
     return t
+
+
+def proportional_cuts(p: int, speeds: Sequence[float]) -> Tuple[tuple, tuple]:
+    """Split the edge portion ``[0, p)`` into contiguous spans sized
+    proportionally to each edge's throughput (``1/speed`` — ``speed`` > 1
+    means slower hardware, so faster edges own more layers; CoEdge's
+    workload-proportional allocation at layer granularity).
+
+    Returns ``(cuts, keep)``: ascending cut points (span ``i`` is
+    ``[cuts[i-1], cuts[i])``, ``cuts[-1] == p``) and the indices into
+    ``speeds`` that received a non-empty span.  Cumulative rounding keeps the
+    allocation deterministic and the spans contiguous; edges whose share
+    rounds to zero layers are dropped and the split re-runs over the
+    survivors until stable, so the function is *idempotent on the kept set*
+    — re-splitting ``p`` over ``speeds[keep]`` returns the same cuts.  Plan
+    search, span assignment, and round timing all rely on that to agree on
+    one span layout.  ``k == 1`` always returns ``((p,), (0,))``."""
+    if p <= 0:
+        return (), ()
+
+    def split(spds):
+        weights = [1.0 / max(s, 1e-12) for s in spds]
+        total = sum(weights)
+        cuts: List[int] = []
+        keep: List[int] = []
+        prev, cum = 0, 0.0
+        for i, w in enumerate(weights):
+            cum += w
+            c = p if i == len(weights) - 1 else int(round(p * cum / total))
+            if c > prev:
+                cuts.append(c)
+                keep.append(i)
+                prev = c
+        return tuple(cuts), tuple(keep)
+
+    idx = tuple(range(len(speeds)))
+    spds = tuple(speeds)
+    while True:
+        cuts, keep = split(spds)
+        if len(keep) == len(spds):
+            return cuts, tuple(idx[i] for i in keep)
+        idx = tuple(idx[i] for i in keep)
+        spds = tuple(spds[i] for i in keep)
+
+
+def multi_branch_latency(graph: InferenceGraph, exit_idx: int,
+                         cuts: Sequence[int], edge_loads: Sequence[float],
+                         f_edge, f_device, bandwidth_bps: float,
+                         device_load: float = 1.0,
+                         edge_bw_bps: Optional[float] = None) -> float:
+    """k-cut generalization of :func:`branch_latency`.
+
+    ``cuts`` are ascending; span ``i`` = layers ``[cuts[i-1], cuts[i])`` runs
+    on an edge with compute multiplier ``edge_loads[i]``; the device runs
+    ``[cuts[-1], N)``.  Consecutive spans hand the activation over an
+    edge<->edge backbone link (``edge_bw_bps``); the device<->edge uplink and
+    final downlink are billed at ``bandwidth_bps`` exactly as in the 1-cut
+    case.  With a single cut this accumulates the identical float terms in
+    the identical order as :func:`branch_latency` — bit-exact reduction
+    (asserted by tests/test_coop.py)."""
+    branch = graph.branches[exit_idx - 1]
+    n = len(branch)
+    p = cuts[-1] if cuts else 0
+    t = 0.0
+    if p > 0:
+        t += graph.input_bytes / bandwidth_bps             # Input/B uplink
+        t += graph.cut_bytes(exit_idx, p) / bandwidth_bps  # D_p/B downlink
+    start = 0
+    for i, (cut, load) in enumerate(zip(cuts, edge_loads)):
+        for j in range(start, min(cut, n)):
+            t += f_edge.predict(branch[j]) * load
+        if i < len(cuts) - 1:                              # edge -> edge hop
+            assert edge_bw_bps is not None, \
+                "multi-edge plans need an edge<->edge backbone bandwidth"
+            t += graph.cut_bytes(exit_idx, cut) / edge_bw_bps
+        start = cut
+    for j in range(p, n):
+        t += f_device.predict(branch[j]) * device_load
+    return t
+
+
+def optimize_multi(graph: InferenceGraph, f_edge, f_device,
+                   bandwidth_bps: float, latency_req_s: float,
+                   edge_speeds: Sequence[float], *,
+                   device_load: float = 1.0,
+                   edge_bw_bps: Optional[float] = None) -> CoInferencePlan:
+    """Algorithm 1 over the k-cut space for one *fixed ordered* edge set:
+    search (exit i, total edge layers p) with spans sized proportionally to
+    ``edge_speeds``; prefer the largest exit meeting the deadline, else the
+    global minimum-latency plan flagged infeasible (fallback semantics of
+    :func:`optimize_with_fallback`)."""
+    speeds = tuple(edge_speeds)
+
+    def scan(exit_idx: int) -> Tuple[int, tuple, float]:
+        nn = len(graph.branches[exit_idx - 1])
+        best = (0, (), float("inf"))
+        for p in range(nn + 1):
+            cuts, kept = proportional_cuts(p, speeds)
+            loads = [speeds[i] for i in kept]
+            lat = multi_branch_latency(graph, exit_idx, cuts, loads, f_edge,
+                                       f_device, bandwidth_bps,
+                                       device_load=device_load,
+                                       edge_bw_bps=edge_bw_bps)
+            if lat < best[2]:
+                best = (p, cuts, lat)
+        return best
+
+    fallback = None
+    for i in range(graph.num_exits, 0, -1):        # largest exit first
+        p, cuts, lat = scan(i)
+        plan = CoInferencePlan(exit_point=i, partition=p, latency_s=lat,
+                               accuracy=graph.accuracy[i - 1], cuts=cuts)
+        if lat <= latency_req_s:
+            return plan
+        if fallback is None or lat < fallback.latency_s:
+            plan.feasible = False
+            fallback = plan
+    return fallback
 
 
 def best_partition(graph: InferenceGraph, exit_idx: int, f_edge, f_device,

@@ -14,7 +14,7 @@ from repro.core import config_map as CM
 from repro.core.graph import InferenceGraph
 from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,
                                       ScaledLatencyModel)
-from repro.core.partitioner import CoInferencePlan
+from repro.core.partitioner import CoInferencePlan, optimize_multi
 from repro.core.profiler import (DEVICE_SLOWDOWN, profile_all_branches,
                                  profiles_to_records)
 from repro.core.runtime_optimizer import (DynamicRuntimeOptimizer,
@@ -90,3 +90,18 @@ class EdgentPlanner:
             return self.dynamic_opt.plan(bandwidth_bps)
         assert self.static_opt is not None
         return self.static_opt.plan(bandwidth_bps)
+
+    def plan_multi(self, bandwidth_bps: float, edge_speeds: Sequence[float],
+                   *, device_load: float = 1.0,
+                   edge_bw_bps: Optional[float] = None) -> CoInferencePlan:
+        """Joint (exit, k-cut partition) search for one ordered edge set:
+        spans sized proportionally to ``edge_speeds``, device compute scaled
+        by ``device_load``, edge<->edge hops billed at ``edge_bw_bps``.
+        Unlike :meth:`plan`, the result is conditioned on the candidate
+        hardware — the caller (``repro.fleet.joint.JointPlanner``) searches
+        edge sets on top of this."""
+        assert self.f_edge is not None, "run offline_static/with_models first"
+        return optimize_multi(self.graph, self.f_edge, self.f_device,
+                              bandwidth_bps, self.latency_req_s, edge_speeds,
+                              device_load=device_load,
+                              edge_bw_bps=edge_bw_bps)

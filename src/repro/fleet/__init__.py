@@ -6,13 +6,16 @@ through a shared ``CoInferenceStepper``.
 """
 from repro.fleet.cluster import (DeviceNode, EdgeNode, FleetTopology,  # noqa: F401
                                  TraceLink, make_fleet)
+from repro.fleet.coop import (CoopAssignment, assign_spans,  # noqa: F401
+                              hop_schedule, span_seconds)
 from repro.fleet.engine import FleetEngine  # noqa: F401
 from repro.fleet.events import Event, EventQueue  # noqa: F401
+from repro.fleet.joint import JointDecision, JointPlanner  # noqa: F401
 from repro.fleet.metrics import FleetMetrics, RequestRecord  # noqa: F401
 from repro.fleet.scenario import smoke_lm_scenario  # noqa: F401
 from repro.fleet.router import (BandwidthAwareRouter,  # noqa: F401
-                                JoinShortestQueueRouter, RoundRobinRouter,
-                                Router, make_router)
+                                JoinShortestQueueRouter, JointRouter,
+                                RoundRobinRouter, Router, make_router)
 from repro.fleet.workload import (DEFAULT_TENANTS, FleetRequest,  # noqa: F401
                                   TenantClass, diurnal_arrivals,
                                   make_workload, poisson_arrivals)

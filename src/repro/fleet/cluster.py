@@ -36,6 +36,12 @@ class DeviceNode:
     did: int
     link: TraceLink
     slowdown: float = 1.0        # device-tier compute multiplier (>=1 = slower)
+    # --- runtime state (owned by FleetEngine) ---
+    busy_until_s: float = 0.0    # device-local execution is serial: one
+    #                              request at a time, later ones queue
+
+    def local_backlog_s(self, now: float) -> float:
+        return max(0.0, self.busy_until_s - now)
 
 
 @dataclass
@@ -50,22 +56,40 @@ class EdgeNode:
     busy_s: float = 0.0
     ema_round_s: float = 0.0
     completed: int = 0
+    coop_inflight: int = 0       # *planned* cooperative span memberships for
+    #                              requests slotted at other edges; per-round
+    #                              demotion may temporarily shrink the spans
+    #                              actually executed (see coop_busy_s in
+    #                              FleetMetrics for realized compute)
+    tokens_owed: int = 0         # decode tokens still owed to queued+active
+    #                              requests (FleetEngine: +max_new_tokens on
+    #                              enqueue, -1 per request per round)
 
     def backlog(self) -> int:
         return len(self.queue) + len(self.active)
 
     def backlog_s(self) -> float:
-        """Crude pending-work estimate (seconds) for latency-aware routing:
-        queued + active requests amortized over the batch width, scaled by
-        the recent round time."""
+        """Pending-work estimate (seconds) for latency-aware routing: tokens
+        still owed to queued + active requests, amortized over the batch
+        width at the recent round time.  Counting *tokens* rather than
+        requests matters — a queued arrival waits for slots that free at
+        whole-request granularity, so per-request counting underestimates
+        the wait by the mean decode length.  ``tokens_owed`` is maintained
+        incrementally because this sits on the per-arrival routing hot path
+        (every edge per arrival, times every candidate set under joint
+        planning)."""
         per_round = self.ema_round_s if self.ema_round_s > 0 else 1e-3
-        return per_round * self.backlog() / max(self.capacity, 1)
+        return per_round * self.tokens_owed / max(self.capacity, 1)
 
 
 @dataclass
 class FleetTopology:
     devices: List[DeviceNode]
     edges: List[EdgeNode]
+    # edge<->edge backbone bandwidth (bytes/s): edges sit on a wired LAN/MAN,
+    # orders of magnitude above the device wireless links, which is what
+    # makes CoEdge-style multi-edge spans viable at all.
+    edge_bw_bps: float = 50e6
 
     @property
     def num_devices(self) -> int:
@@ -81,7 +105,8 @@ def make_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
                hetero_edges: bool = True, max_edge_slowdown: float = 3.0,
                device_slowdown_range=(0.8, 2.5),
                lo_mbps: float = 0.3, hi_mbps: float = 6.0,
-               trace_len: int = 600) -> FleetTopology:
+               trace_len: int = 600,
+               edge_bw_mbps: float = 400.0) -> FleetTopology:
     """Sample a reproducible heterogeneous topology.
 
     ``trace='oboe'`` gives each device an independent piecewise-stationary
@@ -107,4 +132,4 @@ def make_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
         else np.ones(num_edges)
     edges = [EdgeNode(j, capacity=edge_capacity, speed=float(speeds[j]))
              for j in range(num_edges)]
-    return FleetTopology(devices, edges)
+    return FleetTopology(devices, edges, edge_bw_bps=edge_bw_mbps * 125e3)

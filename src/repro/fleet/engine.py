@@ -26,6 +26,8 @@ import numpy as np
 from repro.core.graph import InferenceGraph
 from repro.core.planner import EdgentPlanner
 from repro.fleet.cluster import EdgeNode, FleetTopology
+from repro.fleet.coop import (effective_assignment, hop_schedule,
+                              span_seconds)
 from repro.fleet.events import EventQueue
 from repro.fleet.metrics import FleetMetrics, RequestRecord
 from repro.fleet.router import Router, RoundRobinRouter, make_router
@@ -52,21 +54,30 @@ class FleetEngine:
         if router is None:
             router = RoundRobinRouter()
         elif isinstance(router, str):
-            router = make_router(router, stepper=self.stepper)
+            router = make_router(router, stepper=self.stepper, topo=topo,
+                                 prefill_div=prefill_div)
         self.router = router
+        self._hop_cache = {}       # (exit, assign) -> hop_schedule timeline
 
     # ---------------------------------------------------------------- run
     def run(self, workload: List[FleetRequest]) -> FleetMetrics:
         evq = EventQueue()
         metrics = FleetMetrics(num_edges=self.topo.num_edges)
         self._qseq = 0
+        self.router.reset()                # stateful policies must not leak
+        #                                    decisions across runs
         for edge in self.topo.edges:       # reset runtime state for reruns
             edge.queue, edge.active = [], []
             edge.round_inflight = False
             edge.busy_s = edge.ema_round_s = 0.0
             edge.completed = 0
+            edge.coop_inflight = 0
+            edge.tokens_owed = 0
+        for dev in self.topo.devices:
+            dev.busy_until_s = 0.0
         for req in workload:               # same: a workload list is reusable
             req.edge, req.admitted_s = -1, None
+            req.assign = None
             req.tokens_done, req.prefill_pending = 0, True
             req.plan, req.exit_point = None, 0
             req.cache, req.next_tok, req.tokens = None, None, []
@@ -79,6 +90,9 @@ class FleetEngine:
                 self._on_round_done(ev.payload, evq, metrics)
             elif ev.kind == "local_done":
                 self._on_local_done(ev.payload, evq, metrics)
+            elif ev.kind == "transfer":
+                src, dst, nbytes = ev.payload
+                metrics.add_transfer(src, dst, nbytes)
         return metrics
 
     # ---------------------------------------------------------------- events
@@ -86,37 +100,54 @@ class FleetEngine:
                     metrics: FleetMetrics):
         device = self.topo.devices[req.device]
         bw = device.link.bw_at(evq.now)
-        req.plan = self.stepper.plan(bw)
-        if req.plan.partition == 0:
-            # Edgent chose device-only: the request never touches an edge
-            self._run_local(req, device, bw, evq)
-            return
-        edge = self.router.route(req, device, self.topo, evq.now)
+        decision = self.router.decide(req, device, self.topo, evq.now)
+        if decision is not None:
+            # joint routing: (edge set, partition, exit) chosen together;
+            # the primary edge hosts the queue slot and decode rounds
+            req.plan, req.assign = decision.plan, decision.assign
+            if decision.local:
+                self._run_local(req, device, bw, evq)
+                return
+            edge = self.topo.edges[decision.primary]
+        else:
+            req.plan = self.stepper.plan(bw)
+            if req.plan.partition == 0:
+                # Edgent chose device-only: the request never touches an edge
+                self._run_local(req, device, bw, evq)
+                return
+            edge = self.router.route(req, device, self.topo, evq.now)
         req.edge = edge.eid
         heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
+        edge.tokens_owed += req.max_new_tokens
         self._qseq += 1
         if not edge.round_inflight:
             self._begin_round(edge, evq, metrics)
 
     def _run_local(self, req: FleetRequest, device, bw: float,
                    evq: EventQueue):
+        # the device decodes one request at a time: later arrivals queue
+        # behind its in-flight local work (no free concurrency on-device)
         now = evq.now
-        req.admitted_s = now
+        start = max(now, device.busy_until_s)
+        req.admitted_s = start
         per_exit = self.stepper.per_exit_times_cached(
             0, bw, device_load=device.slowdown)
-        req.exit_point = self.stepper.choose_exit(
-            req.deadline_s - now, per_exit, req.max_new_tokens,
-            req.plan.exit_point) if self.demote else req.plan.exit_point
-        total = per_exit[req.exit_point - 1] * req.max_new_tokens + \
-            per_exit[req.plan.exit_point - 1] * \
+        # prefill is billed at the plan exit regardless of demotion, so it
+        # must come out of the budget the exit choice sees
+        prefill = per_exit[req.plan.exit_point - 1] * \
             max(1, req.prompt_len // self.prefill_div)
+        req.exit_point = self.stepper.choose_exit(
+            req.deadline_s - start - prefill, per_exit, req.max_new_tokens,
+            req.plan.exit_point) if self.demote else req.plan.exit_point
+        total = per_exit[req.exit_point - 1] * req.max_new_tokens + prefill
         if self.model is not None:
             self._prefill_real(req)
             while req.tokens_done < req.max_new_tokens:
                 self._decode_real(req)
                 req.tokens_done += 1
             req.cache = req.next_tok = None
-        evq.push(now + total, "local_done", req)
+        device.busy_until_s = start + total
+        evq.push(start + total, "local_done", req)
 
     def _on_local_done(self, req: FleetRequest, evq: EventQueue,
                        metrics: FleetMetrics):
@@ -124,7 +155,8 @@ class FleetEngine:
         metrics.record(RequestRecord(
             rid=req.rid, tenant=req.tenant, device=req.device, edge=-1,
             arrival_s=req.arrival_s, finish_s=now,
-            latency_s=max(0.0, now - req.arrival_s), queue_delay_s=0.0,
+            latency_s=max(0.0, now - req.arrival_s),
+            queue_delay_s=max(0.0, (req.admitted_s or 0.0) - req.arrival_s),
             met_slo=now <= req.deadline_s, exit_point=req.exit_point,
             partition=0))
 
@@ -134,6 +166,7 @@ class FleetEngine:
         still_active = []
         for req in edge.active:
             req.tokens_done += 1
+            edge.tokens_owed -= 1
             if req.tokens_done >= req.max_new_tokens:
                 edge.completed += 1
                 metrics.record(RequestRecord(
@@ -145,7 +178,12 @@ class FleetEngine:
                                       - req.arrival_s),
                     met_slo=now <= req.deadline_s,
                     exit_point=req.exit_point,
-                    partition=req.plan.partition))
+                    partition=req.plan.partition,
+                    edges=(req.assign.eids if req.assign is not None
+                           else (edge.eid,))))
+                if req.assign is not None:
+                    for eid in req.assign.eids[1:]:
+                        self.topo.edges[eid].coop_inflight -= 1
                 req.cache = req.next_tok = None      # free decode state
             else:
                 still_active.append(req)
@@ -163,6 +201,9 @@ class FleetEngine:
             _, _, req = heapq.heappop(edge.queue)
             if req.admitted_s is None:
                 req.admitted_s = now
+                if req.assign is not None:
+                    for eid in req.assign.eids[1:]:
+                        self.topo.edges[eid].coop_inflight += 1
             if self.model is not None:
                 self._prefill_real(req)
             edge.active.append(req)
@@ -174,23 +215,35 @@ class FleetEngine:
             bw = device.link.bw_at(now)
             if req.plan is None:
                 req.plan = self.stepper.plan(bw)
-            per_exit = self.stepper.per_exit_times_cached(
-                req.plan.partition, bw, edge_load=edge.speed,
-                device_load=device.slowdown, include_input=False)
+            if req.assign is not None:
+                # cooperative chain: spans at each member's speed + backbone
+                # hops (k=1 degenerates to the single-edge numbers exactly)
+                per_exit = self.stepper.per_exit_times_coop_cached(
+                    req.plan.partition, req.assign.speeds, bw,
+                    device_load=device.slowdown,
+                    edge_bw_bps=self.topo.edge_bw_bps, include_input=False)
+            else:
+                per_exit = self.stepper.per_exit_times_cached(
+                    req.plan.partition, bw, edge_load=edge.speed,
+                    device_load=device.slowdown, include_input=False)
             tokens_left = req.max_new_tokens - req.tokens_done
+            # input payload ships once, then prompt_len/8 prefill steps —
+            # billed at the plan exit, so the first round's exit choice must
+            # budget for it
+            prefill = self.stepper.input_time(req.plan.partition, bw) + \
+                per_exit[req.plan.exit_point - 1] * \
+                max(1, req.prompt_len // self.prefill_div) \
+                if req.prefill_pending else 0.0
             if self.demote:
                 req.exit_point = self.stepper.choose_exit(
-                    req.deadline_s - now, per_exit, tokens_left,
+                    req.deadline_s - now - prefill, per_exit, tokens_left,
                     req.plan.exit_point)
             else:
                 req.exit_point = req.plan.exit_point
-            t_step = per_exit[req.exit_point - 1]
-            if req.prefill_pending:
-                # input payload ships once, then prompt_len/8 prefill steps
-                t_step += self.stepper.input_time(req.plan.partition, bw) + \
-                    per_exit[req.plan.exit_point - 1] * \
-                    max(1, req.prompt_len // self.prefill_div)
-                req.prefill_pending = False
+            t_step = per_exit[req.exit_point - 1] + prefill
+            req.prefill_pending = False
+            if req.assign is not None and req.assign.k > 1:
+                self._emit_hops(req, now, evq, metrics)
             if self.model is not None:
                 self._decode_real(req)
             round_dt = max(round_dt, t_step)
@@ -200,6 +253,38 @@ class FleetEngine:
             0.8 * edge.ema_round_s + 0.2 * round_dt
         edge.round_inflight = True
         evq.push(now + round_dt, "round", edge)
+
+    # ---------------------------------------------------------------- coop
+    def _emit_hops(self, req: FleetRequest, now: float, evq: EventQueue,
+                   metrics: FleetMetrics):
+        """One decode round of a cooperative request hops across its edge
+        set: schedule the inter-edge hand-offs as ``transfer`` events at
+        their in-round completion offsets and track each secondary edge's
+        span compute as cooperative busy time (the primary's full round —
+        which spans the whole chain — is billed by the caller)."""
+        key = (req.exit_point, req.assign)
+        hit = self._hop_cache.get(key)
+        if hit is None:
+            f_edge = self.stepper.planner.f_edge
+            # a demoted exit's branch can be shorter than the planned
+            # partition — hop/busy accounting must follow the clamped spans
+            # the latency model actually bills for this exit
+            eff = effective_assignment(self.stepper.graph, req.exit_point,
+                                       req.assign)
+            hit = self._hop_cache[key] = (
+                eff,
+                hop_schedule(self.stepper.graph, req.exit_point, eff,
+                             f_edge, self.topo.edge_bw_bps),
+                span_seconds(self.stepper.graph, req.exit_point, eff,
+                             f_edge))
+        eff, hops, spans = hit
+        for dt, src, dst, nbytes in hops:
+            evq.push(now + dt, "transfer", (src, dst, nbytes))
+        # secondary compute is tracked apart from busy_s: the primary's
+        # round_dt already covers the full chain, so adding spans to
+        # edge_busy_s would double-bill utilization
+        for eid, span_s in zip(eff.eids[1:], spans[1:]):
+            metrics.add_coop_busy(eid, span_s)
 
     # ---------------------------------------------------------------- real decode
     def _prefill_real(self, req: FleetRequest):

@@ -1,0 +1,134 @@
+"""Joint (edge-set, partition, exit) planning (arXiv:2310.12937).
+
+``BandwidthAwareRouter`` optimizes sequentially: Algorithm 1 fixes (exit,
+partition) for a *speed-1* edge, then placement shops that fixed plan around.
+``JointPlanner`` searches the product space instead: for every candidate
+edge set it runs the k-cut Algorithm-1 search *conditioned on that set's
+speeds and this device's slowdown* (``CoInferenceStepper.plan_multi``, cached
+on quantized bandwidth x edge-speed tuple x device slowdown), prices in
+queueing at the primary and contention at the secondaries, and picks the
+cheapest estimated completion.  Single-edge sets are always in the candidate
+pool, so the joint decision degrades gracefully to bandwidth-aware routing
+when cooperation does not pay.
+
+Candidate sets are speed-ordered prefixes around each primary (every edge as
+primary, partnered with the fastest other edges up to ``max_coop``), which
+bounds the search to O(M * max_coop) sets per arrival — and the per-set
+plans are shared fleet-wide through the stepper's plan cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.partitioner import CoInferencePlan
+from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
+from repro.fleet.coop import CoopAssignment, assign_spans
+
+
+@dataclass
+class JointDecision:
+    plan: CoInferencePlan
+    assign: CoopAssignment        # empty (k=0) for device-only plans
+    est_s: float                  # estimated completion at the plan's exit
+    est_min_s: float = 0.0        # estimated completion demoted to exit 1
+
+    @property
+    def local(self) -> bool:
+        return self.plan.partition == 0
+
+    @property
+    def primary(self) -> int:
+        return self.assign.eids[0]
+
+
+class JointPlanner:
+    def __init__(self, stepper, topo: FleetTopology, *, max_coop: int = 3,
+                 prefill_div: int = 8):
+        self.stepper = stepper
+        self.topo = topo
+        self.max_coop = max(1, max_coop)
+        self.prefill_div = prefill_div
+        self._sets = self._candidate_sets(topo)
+
+    # ------------------------------------------------------------ candidates
+    def _candidate_sets(self, topo: FleetTopology) -> List[Tuple[EdgeNode, ...]]:
+        """Every edge as primary, extended by the fastest remaining edges
+        (speed ascending = fastest first, tie-break on eid), one prefix per
+        cooperative width 1..max_coop.  Deduplicated, deterministic order."""
+        # the empty set is always a candidate: its plan degenerates to
+        # device-only, so congested edges push arrivals back onto their own
+        # device (offload admission control)
+        out: List[Tuple[EdgeNode, ...]] = [()]
+        seen = set()
+        for primary in topo.edges:
+            partners = sorted((e for e in topo.edges if e.eid != primary.eid),
+                              key=lambda e: (e.speed, e.eid))
+            for k in range(1, min(self.max_coop, len(partners) + 1) + 1):
+                cand = (primary,) + tuple(partners[:k - 1])
+                key = tuple(e.eid for e in cand)
+                if key not in seen:
+                    seen.add(key)
+                    out.append(cand)
+        return out
+
+    # ------------------------------------------------------------ decision
+    def decide(self, req, device: DeviceNode, topo: FleetTopology,
+               now: float) -> JointDecision:
+        """Algorithm-1 semantics lifted to the fleet: among candidates whose
+        *estimated completion* (plan latency + current queueing) meets the
+        request's deadline, take the most accurate exit (tie-break cheaper
+        estimate, then lower edge ids); if none fits, minimize the estimate
+        — the fleet analogue of ``optimize_with_fallback``."""
+        bw = device.link.bw_at(now)
+        cands: List[JointDecision] = []
+        for cand in self._sets:
+            speeds = tuple(e.speed for e in cand)
+            plan = self.stepper.plan_multi(
+                bw, speeds, device_load=device.slowdown,
+                edge_bw_bps=topo.edge_bw_bps)
+            # the engine bills prompt_len/prefill_div prefill steps at the
+            # plan exit on admission — estimate the same way or marginal
+            # requests look feasible when they are not
+            prefill_steps = max(1, req.prompt_len // self.prefill_div)
+            if plan.partition == 0:
+                assign = CoopAssignment((), (), ())
+                per_exit = self.stepper.per_exit_times_cached(
+                    0, bw, device_load=device.slowdown)
+                # the device runs local requests serially — queue behind its
+                # in-flight work exactly as edge candidates queue behind
+                # theirs
+                base = device.local_backlog_s(now)
+            else:
+                assign = assign_spans(plan.partition, cand)
+                per_exit = self.stepper.per_exit_times_coop_cached(
+                    plan.partition, assign.speeds, bw,
+                    device_load=device.slowdown,
+                    edge_bw_bps=topo.edge_bw_bps, include_input=False)
+                primary = topo.edges[assign.eids[0]]
+                base = primary.backlog_s() + \
+                    self.stepper.input_time(plan.partition, bw)
+                # secondaries are contended resources too: bill their current
+                # backlog against this plan in proportion to the span of work
+                # we would place there
+                for frac, eid in zip(assign.span_fractions()[1:],
+                                     assign.eids[1:]):
+                    base += topo.edges[eid].backlog_s() * frac
+            prefill = per_exit[plan.exit_point - 1] * prefill_steps
+            est = base + prefill + \
+                per_exit[plan.exit_point - 1] * req.max_new_tokens
+            est_min = base + prefill + per_exit[0] * req.max_new_tokens
+            if (plan.partition == 0) == (len(cand) == 0):
+                # keep one canonical device-only candidate (the empty set);
+                # a non-empty set whose plan collapsed to partition 0 is a
+                # duplicate of it
+                cands.append(JointDecision(plan=plan, assign=assign,
+                                           est_s=est, est_min_s=est_min))
+        slack = req.deadline_s - now
+        feasible = [d for d in cands if d.est_s <= slack]
+        if feasible:
+            return min(feasible, key=lambda d: (-d.plan.accuracy, d.est_s,
+                                                d.assign.eids))
+        # nothing fits at its plan exit: the engine will demote per round, so
+        # judge candidates by what they can achieve at the earliest exit
+        return min(cands, key=lambda d: (d.est_min_s, d.assign.eids))

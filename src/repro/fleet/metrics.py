@@ -17,7 +17,7 @@ class RequestRecord:
     rid: int
     tenant: str
     device: int
-    edge: int
+    edge: int                      # primary edge (-1 = device-only)
     arrival_s: float
     finish_s: float
     latency_s: float
@@ -25,6 +25,7 @@ class RequestRecord:
     met_slo: bool
     exit_point: int
     partition: int
+    edges: tuple = ()              # full cooperative edge set (len > 1 = coop)
 
 
 @dataclass
@@ -33,6 +34,13 @@ class FleetMetrics:
     records: List[RequestRecord] = field(default_factory=list)
     edge_busy_s: Dict[int, float] = field(default_factory=dict)
     horizon_s: float = 0.0
+    # edge<->edge backbone traffic from cooperative spans: (src, dst) -> bytes
+    transfer_bytes: Dict[tuple, int] = field(default_factory=dict)
+    transfer_events: int = 0
+    # compute a secondary edge contributes to other edges' requests — kept
+    # apart from edge_busy_s (slot occupancy) so utilization is not
+    # double-billed: the primary's round already spans the full chain
+    coop_busy_s: Dict[int, float] = field(default_factory=dict)
 
     def record(self, rec: RequestRecord):
         self.records.append(rec)
@@ -40,6 +48,14 @@ class FleetMetrics:
 
     def add_busy(self, eid: int, dt_s: float):
         self.edge_busy_s[eid] = self.edge_busy_s.get(eid, 0.0) + dt_s
+
+    def add_transfer(self, src: int, dst: int, nbytes: int):
+        key = (src, dst)
+        self.transfer_bytes[key] = self.transfer_bytes.get(key, 0) + nbytes
+        self.transfer_events += 1
+
+    def add_coop_busy(self, eid: int, dt_s: float):
+        self.coop_busy_s[eid] = self.coop_busy_s.get(eid, 0.0) + dt_s
 
     # ------------------------------------------------------------ summaries
     def summary(self) -> Dict:
@@ -58,8 +74,13 @@ class FleetMetrics:
             exits[r.exit_point] = exits.get(r.exit_point, 0) + 1
             parts[r.partition] = parts.get(r.partition, 0) + 1
             per_tenant.setdefault(r.tenant, []).append(r.met_slo)
+        coop = sum(1 for r in self.records if len(r.edges) > 1)
         return {
             "requests": len(self.records),
+            "coop_requests": coop,
+            "backbone_mb": round(sum(self.transfer_bytes.values()) / 1e6, 6),
+            "coop_busy_s": {eid: round(v, 6)
+                            for eid, v in sorted(self.coop_busy_s.items())},
             "slo_attainment": float(np.mean(met)),
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),

@@ -12,6 +12,7 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
+from repro.fleet.joint import JointDecision, JointPlanner
 
 
 class Router:
@@ -21,12 +22,26 @@ class Router:
               now: float) -> EdgeNode:
         raise NotImplementedError
 
+    def decide(self, req, device: DeviceNode, topo: FleetTopology,
+               now: float) -> Optional[JointDecision]:
+        """Joint routing hook: a router that plans (edge set, partition,
+        exit) jointly returns a full decision; placement-only routers return
+        None and the engine falls back to :meth:`route`."""
+        return None
+
+    def reset(self):
+        """Called by ``FleetEngine.run`` before each simulation so a stateful
+        policy cannot leak decisions across runs (determinism contract)."""
+
 
 class RoundRobinRouter(Router):
     """Oblivious: cycle through the edges in id order."""
     name = "round-robin"
 
     def __init__(self):
+        self._next = 0
+
+    def reset(self):
         self._next = 0
 
     def route(self, req, device, topo, now) -> EdgeNode:
@@ -68,7 +83,27 @@ class BandwidthAwareRouter(Router):
         return min(topo.edges, key=lambda e: (est(e), e.eid))
 
 
-def make_router(name: str, stepper=None) -> Router:
+class JointRouter(Router):
+    """Joint (edge-set, partition, exit) routing: delegates the full search
+    to :class:`~repro.fleet.joint.JointPlanner` and returns an edge *set* —
+    the primary hosts the queue slot, the rest serve cooperative spans."""
+    name = "joint"
+
+    def __init__(self, planner: JointPlanner):
+        self.planner = planner
+
+    def decide(self, req, device, topo, now) -> JointDecision:
+        return self.planner.decide(req, device, topo, now)
+
+    def route(self, req, device, topo, now) -> EdgeNode:
+        dec = self.decide(req, device, topo, now)
+        assert dec.assign.eids, \
+            "device-only decision has no edge — callers must use decide()"
+        return topo.edges[dec.assign.eids[0]]
+
+
+def make_router(name: str, stepper=None, topo=None,
+                max_coop: int = 3, prefill_div: int = 8) -> Router:
     if name in ("rr", "round-robin"):
         return RoundRobinRouter()
     if name in ("jsq", "join-shortest-queue"):
@@ -76,4 +111,11 @@ def make_router(name: str, stepper=None) -> Router:
     if name in ("bw", "bandwidth", "bandwidth-aware"):
         assert stepper is not None, "bandwidth-aware routing needs a stepper"
         return BandwidthAwareRouter(stepper)
+    if name in ("joint", "coop", "joint-coop"):
+        assert stepper is not None and topo is not None, \
+            "joint routing needs a stepper and the fleet topology"
+        assert not getattr(stepper, "dynamic", False), \
+            "joint routing is static-environment only (dynamic=False)"
+        return JointRouter(JointPlanner(stepper, topo, max_coop=max_coop,
+                                        prefill_div=prefill_div))
     raise ValueError(f"unknown router: {name!r}")

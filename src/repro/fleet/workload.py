@@ -40,6 +40,7 @@ class FleetRequest:
     prompt: Optional[np.ndarray] = None
     # --- runtime state (owned by FleetEngine) ---
     edge: int = -1
+    assign: object = None        # CoopAssignment for multi-edge plans
     admitted_s: Optional[float] = None
     tokens_done: int = 0
     prefill_pending: bool = True

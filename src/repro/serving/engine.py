@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import InferenceGraph
-from repro.core.partitioner import CoInferencePlan, branch_latency
+from repro.core.partitioner import (CoInferencePlan, branch_latency,
+                                    multi_branch_latency, proportional_cuts)
 from repro.core.planner import EdgentPlanner
 from repro.models.api import Model
 from repro.serving.scheduler import SLOScheduler, pick_exit
@@ -91,10 +92,12 @@ class CoInferenceStepper:
 
     def __init__(self, model: Optional[Model], graph: InferenceGraph,
                  planner: EdgentPlanner, *, dynamic: bool = False,
-                 plan_cache: Optional[Dict[float, CoInferencePlan]] = None):
+                 plan_cache: Optional[Dict[tuple, CoInferencePlan]] = None):
         self.model, self.graph, self.planner = model, graph, planner
         self.dynamic = dynamic
-        self.plan_cache: Dict[float, CoInferencePlan] = \
+        # key: (quantized bw, edge-speed tuple[, quantized device slowdown,
+        #       backbone bw])
+        self.plan_cache: Dict[tuple, CoInferencePlan] = \
             plan_cache if plan_cache is not None else {}
         self._step_cache: Dict[tuple, List[float]] = {}
         self._decode_jit: Dict[Optional[int], object] = {}
@@ -105,14 +108,33 @@ class CoInferenceStepper:
     # ------------------------------------------------------------ planning
     def plan(self, bw_bps: float) -> CoInferencePlan:
         """Online tuning at the current bandwidth.  Static plans are cached
-        by quantized bandwidth state; the dynamic optimizer is stateful
-        (BOCD) so it is always consulted directly."""
+        by (quantized bandwidth, edge-speed tuple) — the single-pair path
+        uses the empty speed tuple; the dynamic optimizer is stateful (BOCD)
+        so it is always consulted directly."""
         if self.dynamic:
             return self.planner.plan(bw_bps, dynamic=True)
-        key = quantize_bw(bw_bps)
+        key = (quantize_bw(bw_bps), ())
         plan = self.plan_cache.get(key)
         if plan is None:
             plan = self.plan_cache[key] = self.planner.plan(bw_bps)
+        return plan
+
+    def plan_multi(self, bw_bps: float, edge_speeds: tuple, *,
+                   device_load: float = 1.0,
+                   edge_bw_bps: Optional[float] = None) -> CoInferencePlan:
+        """Joint (exit, k-cut partition) plan for one ordered candidate edge
+        set, cached on (quantized bandwidth, edge-speed tuple, quantized
+        device slowdown): every device in the same bandwidth state asking
+        about the same hardware reuses one search (the key the fleet's
+        ``JointPlanner`` fans out over)."""
+        assert not self.dynamic, "joint planning is static-environment only"
+        key = (quantize_bw(bw_bps), tuple(edge_speeds),
+               round(device_load, 3), edge_bw_bps)
+        plan = self.plan_cache.get(key)
+        if plan is None:
+            plan = self.plan_cache[key] = self.planner.plan_multi(
+                bw_bps, edge_speeds, device_load=device_load,
+                edge_bw_bps=edge_bw_bps)
         return plan
 
     # ------------------------------------------------------------ timing
@@ -160,6 +182,43 @@ class CoInferenceStepper:
                 partition, qbw, edge_load=edge_load,
                 device_load=device_load, include_input=include_input)
         return hit
+
+    def per_exit_times_coop_cached(self, partition: int, edge_speeds: tuple,
+                                   bw_bps: float, *,
+                                   device_load: float = 1.0,
+                                   edge_bw_bps: Optional[float] = None,
+                                   include_input: bool = True) -> List[float]:
+        """Per-exit step times for a multi-edge span plan (k-cut chain across
+        ``edge_speeds`` with backbone hops).  With a single edge in the set
+        this *is* :meth:`per_exit_times_cached` at that edge's speed — the
+        k=1 reduction the oracle test pins — so the fleet engine can use one
+        call site for both shapes."""
+        speeds = tuple(edge_speeds)
+        if len(speeds) <= 1:
+            return self.per_exit_times_cached(
+                partition, bw_bps, edge_load=speeds[0] if speeds else 1.0,
+                device_load=device_load, include_input=include_input)
+        qbw = quantize_bw(bw_bps)
+        key = (partition, speeds, qbw, device_load, edge_bw_bps,
+               include_input)
+        hit = self._step_cache.get(key)
+        if hit is not None:
+            return hit
+        out = []
+        for e in self.exit_points:
+            p_e = min(partition, len(self.graph.branches[e - 1]))
+            cuts, kept = proportional_cuts(p_e, speeds)
+            loads = [speeds[i] for i in kept]
+            t = multi_branch_latency(self.graph, e, cuts, loads,
+                                     self.planner.f_edge,
+                                     self.planner.f_device, qbw,
+                                     device_load=device_load,
+                                     edge_bw_bps=edge_bw_bps)
+            if not include_input and p_e > 0:
+                t -= self.graph.input_bytes / qbw
+            out.append(t)
+        self._step_cache[key] = out
+        return out
 
     def choose_exit(self, remaining_s: float, per_exit: List[float],
                     tokens_left: int, preferred: int) -> int:
