@@ -2,7 +2,10 @@
 
 Many devices x many edges on a virtual clock: bandwidth-aware routing,
 continuous batching per edge, and per-pair Edgent planning reused fleet-wide
-through a shared ``CoInferenceStepper``.
+through a shared ``CoInferenceStepper``.  Cooperative multi-edge spans and
+joint (edge-set, partition, exit) planning live in ``fleet.coop`` /
+``fleet.joint`` (docs/coop.md); device mobility and BOCD-driven mid-request
+handover live in ``fleet.mobility`` (docs/handover.md).
 """
 from repro.fleet.cluster import (DeviceNode, EdgeNode, FleetTopology,  # noqa: F401
                                  TraceLink, make_fleet)
@@ -12,10 +15,16 @@ from repro.fleet.engine import FleetEngine  # noqa: F401
 from repro.fleet.events import Event, EventQueue  # noqa: F401
 from repro.fleet.joint import JointDecision, JointPlanner  # noqa: F401
 from repro.fleet.metrics import FleetMetrics, RequestRecord  # noqa: F401
-from repro.fleet.scenario import smoke_lm_scenario  # noqa: F401
+from repro.fleet.mobility import (HandoverController, MobileLink,  # noqa: F401
+                                  MobilityModel, Trajectory, edge_grid,
+                                  make_mobile_fleet, migration_bytes,
+                                  random_trajectory)
+from repro.fleet.scenario import (smoke_lm_scenario,  # noqa: F401
+                                  smoke_mobility_scenario)
 from repro.fleet.router import (BandwidthAwareRouter,  # noqa: F401
                                 JoinShortestQueueRouter, JointRouter,
-                                RoundRobinRouter, Router, make_router)
+                                NearestEdgeRouter, RoundRobinRouter, Router,
+                                make_router)
 from repro.fleet.workload import (DEFAULT_TENANTS, FleetRequest,  # noqa: F401
                                   TenantClass, diurnal_arrivals,
                                   make_workload, poisson_arrivals)

@@ -33,8 +33,11 @@ class TraceLink:
 
 @dataclass
 class DeviceNode:
+    """One end-user device: a bandwidth link (``TraceLink`` for static
+    fleets, ``fleet.mobility.MobileLink`` under mobility) plus a compute
+    slowdown; executes device-side partitions serially."""
     did: int
-    link: TraceLink
+    link: object                 # TraceLink | MobileLink (duck-typed bw_at)
     slowdown: float = 1.0        # device-tier compute multiplier (>=1 = slower)
     # --- runtime state (owned by FleetEngine) ---
     busy_until_s: float = 0.0    # device-local execution is serial: one
@@ -66,6 +69,7 @@ class EdgeNode:
     #                              enqueue, -1 per request per round)
 
     def backlog(self) -> int:
+        """Requests currently bound to this edge (queued + in the batch)."""
         return len(self.queue) + len(self.active)
 
     def backlog_s(self) -> float:

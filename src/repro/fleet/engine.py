@@ -15,6 +15,16 @@ With ``model=None`` the engine is a pure virtual-time simulator (used by
 ``benchmarks/fleet_scale.py`` at hundreds of devices).  With a real model +
 params it also runs the actual decode path per request (B=1 caches, the
 jitted per-exit variants shared fleet-wide via the stepper).
+
+With ``mobility=`` + ``handover=`` the engine additionally models **device
+motion and mid-request migration** (docs/handover.md): per-round bandwidth
+is billed to the request's *serving* edge from the position->bandwidth law,
+periodic ``sample`` events feed each device's handover policy (BOCD change
+points or the geometry oracle), and a fired policy re-plans the device's
+in-flight requests via :meth:`~repro.fleet.joint.JointPlanner.replan` —
+snapshotting the edge-resident state at the current cut, billing the
+transfer over the backbone, and re-binding the request to its new primary
+without dropping or double-counting it.
 """
 from __future__ import annotations
 
@@ -29,19 +39,29 @@ from repro.fleet.cluster import EdgeNode, FleetTopology
 from repro.fleet.coop import (effective_assignment, hop_schedule,
                               span_seconds)
 from repro.fleet.events import EventQueue
+from repro.fleet.joint import JointDecision, JointPlanner
 from repro.fleet.metrics import FleetMetrics, RequestRecord
+from repro.fleet.mobility import (HandoverController, MobilityModel,
+                                  migration_bytes)
 from repro.fleet.router import Router, RoundRobinRouter, make_router
 from repro.fleet.workload import FleetRequest
 from repro.serving.engine import CoInferenceStepper
 
 
 class FleetEngine:
+    """Event-driven fleet simulator: see the module docstring for the model
+    and docs/fleet.md for the architecture.  ``run(workload)`` is the only
+    public entry point; everything else is event handlers."""
+
     def __init__(self, topo: FleetTopology, graph: InferenceGraph,
                  planner: EdgentPlanner, *,
                  router: Union[Router, str, None] = None,
                  model=None, params=None, dynamic: bool = False,
                  dtype=None, demote_on_deadline: bool = True,
-                 prefill_div: int = 8):
+                 prefill_div: int = 8,
+                 mobility: Optional[MobilityModel] = None,
+                 handover: Union[HandoverController, str, None] = None,
+                 replan_max_coop: int = 1):
         self.topo = topo
         self.model, self.params = model, params
         self.dtype = dtype
@@ -51,21 +71,42 @@ class FleetEngine:
         # decode variants are shared across every device and edge
         self.stepper = CoInferenceStepper(model, graph, planner,
                                           dynamic=dynamic)
+        self.mobility = mobility
+        if isinstance(handover, str):
+            assert mobility is not None, "handover policies need a mobility model"
+            handover = HandoverController(mobility, policy=handover)
+        self.handover = handover
+        # mid-request replanning searches (edge set, partition, exit) with
+        # nearest-first candidate ordering; max_coop=1 keeps migrated
+        # requests single-edge by default (coop re-binding is opt-in)
+        self.replanner = JointPlanner(
+            self.stepper, topo, max_coop=replan_max_coop,
+            prefill_div=prefill_div, mobility=mobility) \
+            if mobility is not None else None
         if router is None:
             router = RoundRobinRouter()
         elif isinstance(router, str):
             router = make_router(router, stepper=self.stepper, topo=topo,
-                                 prefill_div=prefill_div)
+                                 prefill_div=prefill_div, mobility=mobility)
         self.router = router
         self._hop_cache = {}       # (exit, assign) -> hop_schedule timeline
 
     # ---------------------------------------------------------------- run
     def run(self, workload: List[FleetRequest]) -> FleetMetrics:
+        """Simulate one workload to completion and return its metrics.
+
+        Deterministic: the same topology + workload + seed replays the
+        identical event schedule (bit-identical summaries).  Engines and
+        workload lists are reusable — all runtime state is reset here."""
         evq = EventQueue()
         metrics = FleetMetrics(num_edges=self.topo.num_edges)
         self._qseq = 0
+        self._pending = len(workload)      # requests not yet completed
+        self._dev_inflight = {d.did: [] for d in self.topo.devices}
         self.router.reset()                # stateful policies must not leak
         #                                    decisions across runs
+        if self.handover is not None:
+            self.handover.reset()
         for edge in self.topo.edges:       # reset runtime state for reruns
             edge.queue, edge.active = [], []
             edge.round_inflight = False
@@ -81,7 +122,13 @@ class FleetEngine:
             req.tokens_done, req.prefill_pending = 0, True
             req.plan, req.exit_point = None, 0
             req.cache, req.next_tok, req.tokens = None, None, []
+            req.replan_pending = req.migrating = False
+            req.handovers, req.migrated_bytes = 0, 0
+            req.coop_counted = False
             evq.push(req.arrival_s, "arrival", req)
+        if self.handover is not None and self.handover.policy != "none":
+            for dev in self.topo.devices:  # bandwidth sampling grid per device
+                evq.push(self.handover.sample_dt, "sample", dev.did)
         while evq:
             ev = evq.pop()
             if ev.kind == "arrival":
@@ -93,7 +140,21 @@ class FleetEngine:
             elif ev.kind == "transfer":
                 src, dst, nbytes = ev.payload
                 metrics.add_transfer(src, dst, nbytes)
+            elif ev.kind == "sample":
+                self._on_sample(ev.payload, evq, metrics)
+            elif ev.kind == "handover":
+                self._on_handover(ev.payload, evq, metrics)
         return metrics
+
+    # ------------------------------------------------------------ bandwidth
+    def _bw(self, device, eid: int, now: float) -> float:
+        """Wireless bandwidth the device sees *to a specific edge*: under
+        mobility this is the position-dependent per-pair rate (a request
+        keeps paying its serving edge's link, which degrades as the device
+        walks away); otherwise the device's single trace."""
+        if self.mobility is not None and eid >= 0:
+            return self.mobility.bw(device.did, eid, now)
+        return device.link.bw_at(now)
 
     # ---------------------------------------------------------------- events
     def _on_arrival(self, req: FleetRequest, evq: EventQueue,
@@ -120,6 +181,7 @@ class FleetEngine:
         heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
         edge.tokens_owed += req.max_new_tokens
         self._qseq += 1
+        self._dev_inflight[req.device].append(req)
         if not edge.round_inflight:
             self._begin_round(edge, evq, metrics)
 
@@ -152,13 +214,15 @@ class FleetEngine:
     def _on_local_done(self, req: FleetRequest, evq: EventQueue,
                        metrics: FleetMetrics):
         now = evq.now
+        self._pending -= 1
         metrics.record(RequestRecord(
             rid=req.rid, tenant=req.tenant, device=req.device, edge=-1,
             arrival_s=req.arrival_s, finish_s=now,
             latency_s=max(0.0, now - req.arrival_s),
             queue_delay_s=max(0.0, (req.admitted_s or 0.0) - req.arrival_s),
             met_slo=now <= req.deadline_s, exit_point=req.exit_point,
-            partition=0))
+            partition=0, handovers=req.handovers,
+            migrated_bytes=req.migrated_bytes))
 
     def _on_round_done(self, edge: EdgeNode, evq: EventQueue,
                        metrics: FleetMetrics):
@@ -169,6 +233,8 @@ class FleetEngine:
             edge.tokens_owed -= 1
             if req.tokens_done >= req.max_new_tokens:
                 edge.completed += 1
+                self._pending -= 1
+                self._untrack(req)
                 metrics.record(RequestRecord(
                     rid=req.rid, tenant=req.tenant, device=req.device,
                     edge=edge.eid, arrival_s=req.arrival_s, finish_s=now,
@@ -180,11 +246,18 @@ class FleetEngine:
                     exit_point=req.exit_point,
                     partition=req.plan.partition,
                     edges=(req.assign.eids if req.assign is not None
-                           else (edge.eid,))))
-                if req.assign is not None:
-                    for eid in req.assign.eids[1:]:
-                        self.topo.edges[eid].coop_inflight -= 1
+                           else (edge.eid,)),
+                    handovers=req.handovers,
+                    migrated_bytes=req.migrated_bytes))
+                self._release_coop(req)
                 req.cache = req.next_tok = None      # free decode state
+            elif req.replan_pending:
+                # the handover policy fired mid-round; the migration (or
+                # in-place replan) executes at this round boundary, where the
+                # edge-resident state is at a well-defined cut
+                req.replan_pending = False
+                self._replan_active(req, edge, now, evq, metrics,
+                                    still_active)
             else:
                 still_active.append(req)
         edge.active = still_active
@@ -201,10 +274,15 @@ class FleetEngine:
             _, _, req = heapq.heappop(edge.queue)
             if req.admitted_s is None:
                 req.admitted_s = now
-                if req.assign is not None:
-                    for eid in req.assign.eids[1:]:
-                        self.topo.edges[eid].coop_inflight += 1
-            if self.model is not None:
+            if req.assign is not None and not req.coop_counted:
+                # (re-)acquire cooperative span slots; a migrated request
+                # re-acquires at its new edge set here
+                for eid in req.assign.eids[1:]:
+                    self.topo.edges[eid].coop_inflight += 1
+                req.coop_counted = True
+            if self.model is not None and req.cache is None:
+                # migrated requests keep their shipped cache — re-prefilling
+                # would clobber the decode state the handover paid to move
                 self._prefill_real(req)
             edge.active.append(req)
         if not edge.active:
@@ -212,7 +290,7 @@ class FleetEngine:
         round_dt = 0.0
         for req in edge.active:
             device = self.topo.devices[req.device]
-            bw = device.link.bw_at(now)
+            bw = self._bw(device, edge.eid, now)
             if req.plan is None:
                 req.plan = self.stepper.plan(bw)
             if req.assign is not None:
@@ -285,6 +363,144 @@ class FleetEngine:
         # edge_busy_s would double-bill utilization
         for eid, span_s in zip(eff.eids[1:], spans[1:]):
             metrics.add_coop_busy(eid, span_s)
+
+    # ---------------------------------------------------------------- handover
+    def _untrack(self, req: FleetRequest):
+        reqs = self._dev_inflight.get(req.device)
+        if reqs is not None and req in reqs:
+            reqs.remove(req)
+
+    def _release_coop(self, req: FleetRequest):
+        if req.coop_counted:
+            for eid in req.assign.eids[1:]:
+                self.topo.edges[eid].coop_inflight -= 1
+            req.coop_counted = False
+
+    def _apply_decision(self, req: FleetRequest, dec: JointDecision, *,
+                        acquire: bool):
+        """Swap the request's (plan, assign) for a replan decision.  Span
+        accounting moves with it: old cooperative slots are released, and the
+        new ones are acquired immediately when the request stays active
+        (``acquire=True``) or lazily at re-admission otherwise."""
+        self._release_coop(req)
+        req.plan = dec.plan
+        req.assign = dec.assign if dec.assign.k > 0 else None
+        if acquire and req.assign is not None:
+            for eid in req.assign.eids[1:]:
+                self.topo.edges[eid].coop_inflight += 1
+            req.coop_counted = True
+
+    def _on_sample(self, did: int, evq: EventQueue, metrics: FleetMetrics):
+        """One tick of the device's bandwidth sampling grid: feed the
+        handover policy the edges currently serving this device and, when it
+        fires, re-plan the device's in-flight requests.  The grid
+        self-terminates once every request completed."""
+        serving = tuple(sorted({r.edge for r in
+                                self._dev_inflight.get(did, ())
+                                if r.edge >= 0 and not r.migrating}))
+        if self.handover.observe(did, evq.now, serving) and \
+                self.replanner is not None:
+            self._replan_device(did, evq, metrics)
+        if self._pending > 0:
+            evq.push(evq.now + self.handover.sample_dt, "sample", did)
+
+    def _replan_device(self, did: int, evq: EventQueue,
+                       metrics: FleetMetrics):
+        device = self.topo.devices[did]
+        for req in list(self._dev_inflight.get(did, ())):
+            if req.migrating or req.edge < 0:
+                continue                       # mid-transfer: nothing to do
+            edge = self.topo.edges[req.edge]
+            if req in edge.active:
+                # mid-decode: defer to the round boundary so the in-flight
+                # round's billing stays intact and the state cut is exact
+                req.replan_pending = True
+            else:
+                self._replan_queued(req, device, edge, evq, metrics)
+
+    def _move_cost(self, req: FleetRequest) -> int:
+        """State bytes resident at the request's current edge span: zero
+        before prefill (nothing materialized yet), otherwise the KV/recurrent
+        snapshot at the planned cut for the tokens processed so far."""
+        if req.prefill_pending:
+            return 0
+        return migration_bytes(self.stepper.graph, req.plan.exit_point,
+                               req.plan.partition,
+                               req.prompt_len + req.tokens_done)
+
+    def _replan_active(self, req: FleetRequest, edge: EdgeNode, now: float,
+                       evq: EventQueue, metrics: FleetMetrics,
+                       still_active: list):
+        nbytes = self._move_cost(req)
+        dec = self.replanner.replan(
+            req, self.topo.devices[req.device], self.topo, now,
+            allow_local=False, move_cost_s=nbytes / self.topo.edge_bw_bps)
+        if dec is None or dec.local or dec.primary == edge.eid:
+            if dec is not None and not dec.local:
+                # same primary, fresh (partition, exit) for the new
+                # bandwidth state — an in-place replan, no state moves
+                self._apply_decision(req, dec, acquire=True)
+            still_active.append(req)
+            return
+        edge.tokens_owed -= req.max_new_tokens - req.tokens_done
+        self._ship(req, edge.eid, dec, nbytes, now, evq, metrics)
+
+    def _replan_queued(self, req: FleetRequest, device, edge: EdgeNode,
+                       evq: EventQueue, metrics: FleetMetrics):
+        """Re-plan a request still waiting in an edge queue.  Un-prefilled
+        requests carry no edge state, so they may also fall back to
+        device-only execution (offload admission control under mobility)."""
+        now = evq.now
+        nbytes = self._move_cost(req)
+        dec = self.replanner.replan(
+            req, device, self.topo, now, allow_local=req.prefill_pending,
+            move_cost_s=nbytes / self.topo.edge_bw_bps)
+        if dec is None or (not dec.local and dec.primary == req.edge):
+            if dec is not None:
+                self._apply_decision(req, dec, acquire=False)
+            return
+        edge.queue = [e for e in edge.queue if e[2] is not req]
+        heapq.heapify(edge.queue)
+        edge.tokens_owed -= req.max_new_tokens - req.tokens_done
+        if dec.local:
+            self._apply_decision(req, dec, acquire=False)
+            req.edge = -1
+            self._untrack(req)
+            self._run_local(req, device, device.link.bw_at(now), evq)
+            return
+        self._ship(req, edge.eid, dec, nbytes, now, evq, metrics)
+
+    def _ship(self, req: FleetRequest, src_eid: int, dec: JointDecision,
+              nbytes: int, now: float, evq: EventQueue,
+              metrics: FleetMetrics):
+        """Migrate a request to a new primary edge: apply the replan, bill
+        the state snapshot over the backbone (one ``transfer`` event at the
+        arrival timestamp), and schedule the ``handover`` event that re-binds
+        the request once the state has landed."""
+        self._apply_decision(req, dec, acquire=False)
+        dst = dec.primary
+        dt = nbytes / self.topo.edge_bw_bps
+        req.migrating = True
+        req.handovers += 1
+        req.migrated_bytes += nbytes
+        req.edge = dst
+        metrics.add_handover(src_eid, dst, nbytes, now + dt)
+        if nbytes > 0:
+            evq.push(now + dt, "transfer", (src_eid, dst, nbytes))
+        evq.push(now + dt, "handover", req)
+
+    def _on_handover(self, req: FleetRequest, evq: EventQueue,
+                     metrics: FleetMetrics):
+        """The state snapshot landed: resume the request at its new primary.
+        The request keeps its deadline, token progress, and decode cache —
+        exactly-once completion is preserved (tests/test_fleet_invariants)."""
+        edge = self.topo.edges[req.edge]
+        req.migrating = False
+        heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
+        self._qseq += 1
+        edge.tokens_owed += req.max_new_tokens - req.tokens_done
+        if not edge.round_inflight:
+            self._begin_round(edge, evq, metrics)
 
     # ---------------------------------------------------------------- real decode
     def _prefill_real(self, req: FleetRequest):

@@ -28,12 +28,14 @@ class EventQueue:
         self.now = 0.0
 
     def push(self, time_s: float, kind: str, payload: Any = None) -> Event:
+        """Schedule an event; same-time events pop in push (FIFO) order."""
         ev = Event(time_s, self._seq, kind, payload)
         self._seq += 1
         heapq.heappush(self._heap, ev)
         return ev
 
     def pop(self) -> Event:
+        """Remove and return the earliest event, advancing ``now``."""
         ev = heapq.heappop(self._heap)
         self.now = ev.time
         return ev

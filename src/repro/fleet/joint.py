@@ -43,13 +43,20 @@ class JointDecision:
 
 
 class JointPlanner:
+    """Joint (edge-set, partition, exit) search per arrival — and, with a
+    :class:`~repro.fleet.mobility.MobilityModel` attached, per mid-request
+    handover via :meth:`replan` (nearest-edge candidate ordering, per-primary
+    bandwidths, and an explicit migration surcharge)."""
+
     def __init__(self, stepper, topo: FleetTopology, *, max_coop: int = 3,
-                 prefill_div: int = 8):
+                 prefill_div: int = 8, mobility=None):
         self.stepper = stepper
         self.topo = topo
         self.max_coop = max(1, max_coop)
         self.prefill_div = prefill_div
+        self.mobility = mobility
         self._sets = self._candidate_sets(topo)
+        self._ordered_sets_cache = {}
 
     # ------------------------------------------------------------ candidates
     def _candidate_sets(self, topo: FleetTopology) -> List[Tuple[EdgeNode, ...]]:
@@ -70,6 +77,29 @@ class JointPlanner:
                 if key not in seen:
                     seen.add(key)
                     out.append(cand)
+        return out
+
+    def _ordered_sets(self, order: Tuple[int, ...]
+                      ) -> List[Tuple[EdgeNode, ...]]:
+        """Candidate sets built from an explicit *preference order* over edge
+        ids (mobility: nearest-first): each prefix position is a primary,
+        partnered with the next edges in order up to ``max_coop``.  Cached
+        per order tuple — the order changes slowly (device motion), not per
+        arrival."""
+        hit = self._ordered_sets_cache.get(order)
+        if hit is not None:
+            return hit
+        edges = {e.eid: e for e in self.topo.edges}
+        out: List[Tuple[EdgeNode, ...]] = [()]
+        seen = set()
+        for primary in order:
+            partners = [e for e in order if e != primary]
+            for k in range(1, min(self.max_coop, len(partners) + 1) + 1):
+                key = (primary,) + tuple(partners[:k - 1])
+                if key not in seen:
+                    seen.add(key)
+                    out.append(tuple(edges[e] for e in key))
+        self._ordered_sets_cache[order] = out
         return out
 
     # ------------------------------------------------------------ decision
@@ -131,4 +161,99 @@ class JointPlanner:
                                                 d.assign.eids))
         # nothing fits at its plan exit: the engine will demote per round, so
         # judge candidates by what they can achieve at the earliest exit
+        return min(cands, key=lambda d: (d.est_min_s, d.assign.eids))
+
+    # ------------------------------------------------------------ replan
+    def replan(self, req, device: DeviceNode, topo: FleetTopology,
+               now: float, *, allow_local: bool = False,
+               move_cost_s: float = 0.0) -> Optional[JointDecision]:
+        """Mid-request replan hook (mobility handover, docs/handover.md).
+
+        Re-searches (edge set, partition, exit) for a request that is
+        *already in flight*: only the remaining decode tokens count, the
+        input payload and prefill are sunk costs unless the request has not
+        prefilled yet, and moving to a primary other than ``req.edge`` pays
+        ``move_cost_s`` (the state-transfer time over the backbone) — which
+        makes staying put the default when no candidate genuinely wins.
+
+        Candidates are ordered **nearest-first** when a mobility model is
+        attached (each of the nearest edges as primary, partnered with the
+        next-nearest up to ``max_coop``) and each candidate is priced at the
+        bandwidth the device would actually see *to that primary*.
+        ``allow_local=True`` additionally admits the device-only fallback
+        (only safe before prefill — afterwards the edge holds state the
+        device cannot absorb).  Returns ``None`` when every candidate
+        collapses to an unusable plan: the caller keeps the request where
+        it is."""
+        did = device.did
+        if self.mobility is not None:
+            order = tuple(sorted(
+                range(topo.num_edges),
+                key=lambda e: (self.mobility.distance(did, e, now), e)))
+        else:
+            order = tuple(e.eid for e in sorted(
+                topo.edges, key=lambda e: (e.speed, e.eid)))
+        tokens_left = req.max_new_tokens - req.tokens_done
+        prefill_steps = max(1, req.prompt_len // self.prefill_div)
+        cands: List[JointDecision] = []
+        for cand in self._ordered_sets(order):
+            if not cand and not allow_local:
+                continue
+            if self.mobility is not None:
+                eid0 = cand[0].eid if cand else \
+                    self.mobility.nearest(did, now)
+                bw = self.mobility.bw(did, eid0, now)
+            else:
+                bw = device.link.bw_at(now)
+            speeds = tuple(e.speed for e in cand)
+            plan = self.stepper.plan_multi(
+                bw, speeds, device_load=device.slowdown,
+                edge_bw_bps=topo.edge_bw_bps)
+            if (plan.partition == 0) != (len(cand) == 0):
+                # collapsed duplicates of the device-only candidate (or an
+                # empty set that somehow kept a partition) are skipped
+                continue
+            if plan.partition == 0:
+                assign = CoopAssignment((), (), ())
+                per_exit = self.stepper.per_exit_times_cached(
+                    0, bw, device_load=device.slowdown)
+                base = device.local_backlog_s(now)
+                prefill = per_exit[plan.exit_point - 1] * prefill_steps
+            else:
+                assign = assign_spans(plan.partition, cand)
+                per_exit = self.stepper.per_exit_times_coop_cached(
+                    plan.partition, assign.speeds, bw,
+                    device_load=device.slowdown,
+                    edge_bw_bps=topo.edge_bw_bps, include_input=False)
+                primary = topo.edges[assign.eids[0]]
+                base = primary.backlog_s()
+                for frac, eid in zip(assign.span_fractions()[1:],
+                                     assign.eids[1:]):
+                    base += topo.edges[eid].backlog_s() * frac
+                if req.edge >= 0 and assign.eids[0] == req.edge:
+                    # the request's own owed tokens sit in this backlog;
+                    # pricing them against itself would bias every replan
+                    # toward a spurious migration to an idle edge
+                    per_round = primary.ema_round_s \
+                        if primary.ema_round_s > 0 else 1e-3
+                    base = max(0.0, base - per_round * tokens_left /
+                               max(primary.capacity, 1))
+                elif req.edge >= 0:
+                    base += move_cost_s
+                prefill = 0.0
+                if req.prefill_pending:
+                    prefill = self.stepper.input_time(plan.partition, bw) + \
+                        per_exit[plan.exit_point - 1] * prefill_steps
+            est = base + prefill + \
+                per_exit[plan.exit_point - 1] * tokens_left
+            est_min = base + prefill + per_exit[0] * tokens_left
+            cands.append(JointDecision(plan=plan, assign=assign,
+                                       est_s=est, est_min_s=est_min))
+        if not cands:
+            return None
+        slack = req.deadline_s - now
+        feasible = [d for d in cands if d.est_s <= slack]
+        if feasible:
+            return min(feasible, key=lambda d: (-d.plan.accuracy, d.est_s,
+                                                d.assign.eids))
         return min(cands, key=lambda d: (d.est_min_s, d.assign.eids))

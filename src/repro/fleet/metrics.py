@@ -26,6 +26,8 @@ class RequestRecord:
     exit_point: int
     partition: int
     edges: tuple = ()              # full cooperative edge set (len > 1 = coop)
+    handovers: int = 0             # mid-request migrations this request took
+    migrated_bytes: int = 0        # state bytes it shipped across handovers
 
 
 @dataclass
@@ -41,24 +43,49 @@ class FleetMetrics:
     # apart from edge_busy_s (slot occupancy) so utilization is not
     # double-billed: the primary's round already spans the full chain
     coop_busy_s: Dict[int, float] = field(default_factory=dict)
+    # mobility handovers (docs/handover.md): every mid-request migration is
+    # logged as (completion time, src edge, dst edge, state bytes); the bytes
+    # are *also* billed as ordinary backbone transfer events, so migrated
+    # traffic is conserved against transfer_bytes (invariant-tested)
+    handover_log: List[tuple] = field(default_factory=list)
 
     def record(self, rec: RequestRecord):
+        """Append one completed request (and advance the makespan)."""
         self.records.append(rec)
         self.horizon_s = max(self.horizon_s, rec.finish_s)
 
     def add_busy(self, eid: int, dt_s: float):
+        """Bill one round's slot-occupancy time to an edge."""
         self.edge_busy_s[eid] = self.edge_busy_s.get(eid, 0.0) + dt_s
 
     def add_transfer(self, src: int, dst: int, nbytes: int):
+        """Aggregate one edge->edge backbone hand-off (coop span hop or
+        handover state snapshot)."""
         key = (src, dst)
         self.transfer_bytes[key] = self.transfer_bytes.get(key, 0) + nbytes
         self.transfer_events += 1
 
     def add_coop_busy(self, eid: int, dt_s: float):
+        """Track span compute a secondary edge served for another edge."""
         self.coop_busy_s[eid] = self.coop_busy_s.get(eid, 0.0) + dt_s
+
+    def add_handover(self, src: int, dst: int, nbytes: int, t_s: float):
+        """Log one mid-request migration completing at virtual time t_s."""
+        self.handover_log.append((round(t_s, 9), src, dst, nbytes))
+
+    @property
+    def handover_count(self) -> int:
+        return len(self.handover_log)
+
+    @property
+    def migrated_bytes_total(self) -> int:
+        return sum(h[3] for h in self.handover_log)
 
     # ------------------------------------------------------------ summaries
     def summary(self) -> Dict:
+        """Aggregate the per-request records into one flat dict.  Pure
+        function of the recorded floats — same seed, same summary, bitwise
+        (the determinism contract the tests and benchmarks assert)."""
         if not self.records:
             return {"requests": 0, "slo_attainment": 0.0}
         lat = np.array([r.latency_s for r in self.records])
@@ -75,9 +102,15 @@ class FleetMetrics:
             parts[r.partition] = parts.get(r.partition, 0) + 1
             per_tenant.setdefault(r.tenant, []).append(r.met_slo)
         coop = sum(1 for r in self.records if len(r.edges) > 1)
+        moved = [r.met_slo for r in self.records if r.handovers > 0]
         return {
             "requests": len(self.records),
             "coop_requests": coop,
+            "handovers": self.handover_count,
+            "migrated_mb": round(self.migrated_bytes_total / 1e6, 6),
+            # SLO attainment restricted to requests that migrated at least
+            # once — how well handed-over requests still land their deadline
+            "handover_slo": float(np.mean(moved)) if moved else None,
             "backbone_mb": round(sum(self.transfer_bytes.values()) / 1e6, 6),
             "coop_busy_s": {eid: round(v, 6)
                             for eid, v in sorted(self.coop_busy_s.items())},

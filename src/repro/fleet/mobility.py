@@ -1,0 +1,291 @@
+"""Device mobility over a 2-D edge geography (docs/handover.md).
+
+The static fleet gives each device a *time-indexed* bandwidth trace that is
+independent of which edge serves it.  This module makes bandwidth a function
+of **position**: edges sit at fixed coordinates, devices follow
+random-waypoint trajectories, and the wireless rate to each edge follows a
+path-loss curve of the device<->edge distance.  A moving device therefore
+sees its link to the serving edge *degrade as it walks away* — the dynamic
+environment of the paper (Sec. IV-C), realized at fleet scale.
+
+Three pieces:
+
+* :class:`Trajectory` / :func:`random_trajectory` — piecewise-linear
+  random-waypoint motion at a configurable speed (area units / s).
+* :class:`MobilityModel` — edge positions + device trajectories + the
+  position->bandwidth law ``bw(d) = peak / (1 + (d / d_ref)^path_exp)``
+  with deterministic per-device multiplicative noise; exposes per-pair
+  ``bw(did, eid, t)``, ``distance``, and ``nearest``.
+* :class:`HandoverController` — decides *when* a device's in-flight work
+  should be re-planned: ``oracle`` watches the geometry directly (fires when
+  a strictly nearer edge appears, with hysteresis), ``bocd`` runs the
+  paper's Bayesian online change-point detector (`repro.core.bocd`) on the
+  bandwidth samples the device actually observes and fires on a detected
+  state transition (Algorithm 3 lifted to the fleet), ``none`` never fires.
+
+The controller only raises the flag; the migration itself (state snapshot,
+backbone billing, re-binding) is executed by
+:class:`~repro.fleet.engine.FleetEngine` using
+:meth:`~repro.fleet.joint.JointPlanner.replan` — see docs/handover.md.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.bocd import BandwidthStateDetector
+from repro.core.graph import InferenceGraph
+from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
+
+MBPS = 1e6 / 8  # bytes/s
+
+
+@dataclass
+class Trajectory:
+    """Piecewise-linear position over time: waypoint ``points[i]`` is reached
+    at ``times_s[i]``; the position is clamped to the endpoints outside the
+    waypoint interval (a device that ran out of waypoints parks)."""
+    times_s: np.ndarray          # [K] ascending, times_s[0] == 0
+    points: np.ndarray           # [K, 2]
+
+    def pos(self, t_s: float) -> np.ndarray:
+        t = float(t_s)
+        times, pts = self.times_s, self.points
+        if t <= times[0] or len(times) == 1:
+            return pts[0]
+        if t >= times[-1]:
+            return pts[-1]
+        i = int(np.searchsorted(times, t, side="right"))
+        t0, t1 = times[i - 1], times[i]
+        w = (t - t0) / max(t1 - t0, 1e-12)
+        return (1.0 - w) * pts[i - 1] + w * pts[i]
+
+
+def random_trajectory(rng: np.random.Generator, speed: float,
+                      horizon_s: float, area: float = 1.0) -> Trajectory:
+    """Random-waypoint motion: start uniformly in ``[0, area]^2``, walk to
+    i.i.d. uniform waypoints at constant ``speed`` until the horizon is
+    covered.  ``speed <= 0`` yields a stationary device."""
+    start = rng.uniform(0.0, area, 2)
+    if speed <= 0.0:
+        return Trajectory(np.zeros(1), start[None, :])
+    times, pts = [0.0], [start]
+    while times[-1] < horizon_s:
+        nxt = rng.uniform(0.0, area, 2)
+        d = float(np.linalg.norm(nxt - pts[-1]))
+        if d < 1e-9:
+            continue
+        times.append(times[-1] + d / speed)
+        pts.append(nxt)
+    return Trajectory(np.asarray(times), np.stack(pts))
+
+
+@dataclass
+class MobilityModel:
+    """Edge geography + device trajectories + the position->bandwidth law.
+
+    ``bw(did, eid, t) = peak_bps / (1 + (d / d_ref)^path_exp) * noise``,
+    floored at ``floor_bps``.  The noise is a pre-drawn per-(device, time
+    slot) multiplicative grid so that two runs of the same seed observe the
+    identical bandwidth history (the fleet determinism contract)."""
+    edge_pos: np.ndarray                     # [M, 2]
+    trajectories: List[Trajectory]           # one per device
+    peak_bps: float = 6.0 * MBPS
+    floor_bps: float = 0.05 * MBPS
+    d_ref: float = 0.25                      # distance at which bw halves
+    path_exp: float = 3.0
+    noise: Optional[np.ndarray] = None       # [N, T] multiplicative
+    noise_dt: float = 0.5
+
+    def pos(self, did: int, t_s: float) -> np.ndarray:
+        return self.trajectories[did].pos(t_s)
+
+    def distance(self, did: int, eid: int, t_s: float) -> float:
+        return float(np.linalg.norm(self.pos(did, t_s) - self.edge_pos[eid]))
+
+    def bw(self, did: int, eid: int, t_s: float) -> float:
+        d = self.distance(did, eid, t_s)
+        raw = self.peak_bps / (1.0 + (d / self.d_ref) ** self.path_exp)
+        if self.noise is not None:
+            slot = min(max(int(t_s / self.noise_dt), 0),
+                       self.noise.shape[1] - 1)
+            raw *= float(self.noise[did, slot])
+        return max(raw, self.floor_bps)
+
+    def nearest(self, did: int, t_s: float) -> int:
+        """Closest edge (deterministic tie-break on lowest eid)."""
+        p = self.pos(did, t_s)
+        d = np.linalg.norm(self.edge_pos - p[None, :], axis=1)
+        return int(np.argmin(d))        # argmin takes the first minimum
+
+
+@dataclass
+class MobileLink:
+    """Drop-in for :class:`~repro.fleet.cluster.TraceLink` under mobility:
+    ``bw_at(t)`` reports the *best available* signal (the nearest edge's
+    rate), which is what a placement-only router should shop with.  The
+    per-serving-edge rate — the one decode rounds are actually billed at —
+    comes from ``MobilityModel.bw`` via ``FleetEngine._bw``."""
+    model: MobilityModel
+    did: int
+
+    def bw_at(self, t_s: float) -> float:
+        return self.model.bw(self.did, self.model.nearest(self.did, t_s), t_s)
+
+
+def edge_grid(num_edges: int, area: float = 1.0) -> np.ndarray:
+    """Deterministic edge placement: cell centers of the smallest square grid
+    covering ``num_edges`` sites over ``[0, area]^2``."""
+    g = int(np.ceil(np.sqrt(num_edges)))
+    pos = [((i % g + 0.5) / g * area, (i // g + 0.5) / g * area)
+           for i in range(num_edges)]
+    return np.asarray(pos)
+
+
+def migration_bytes(graph: InferenceGraph, exit_point: int, partition: int,
+                    tokens: int) -> int:
+    """State that must ship when the edge span ``[0, partition)`` of branch
+    ``exit_point`` moves to another edge mid-request: per-token attention
+    state approximated as 2x (K and V) the activation width at every layer
+    boundary inside the span, times the tokens processed so far, plus any
+    explicit recurrent state the graph declares (``GraphLayer.state_bytes``,
+    which is token-count independent)."""
+    if partition <= 0 or tokens <= 0:
+        return 0
+    branch = graph.branches[exit_point - 1]
+    p = min(partition, len(branch))
+    per_token = sum(2 * lay.out_bytes for lay in branch[:p])
+    state = sum(lay.state_bytes for lay in branch[:p])
+    return int(per_token * tokens + state)
+
+
+class HandoverController:
+    """When should device ``did`` re-plan its in-flight work?
+
+    * ``none``   — never (static binding; the no-handover baseline).
+    * ``oracle`` — fires whenever some *serving* edge (an edge currently
+      hosting one of the device's in-flight requests) has a strictly nearer
+      alternative by the ``hysteresis`` margin: a geometry oracle, the
+      upper reference in ``benchmarks/fleet_scale.py --mobility``.
+    * ``bocd``   — feeds the bandwidth the device observes on its most
+      at-risk serving link (the farthest serving edge) to a per-device
+      :class:`~repro.core.bocd.BandwidthStateDetector` (sampled every
+      ``sample_dt`` seconds of virtual time) and fires on a detected change
+      point, rate-limited by ``min_gap_s`` — the paper's Algorithm 3
+      trigger driving fleet-level migration.
+
+    The controller is *stateful per run*; :meth:`reset` restores a clean
+    slate so one engine can be re-run deterministically.
+    """
+
+    POLICIES = ("none", "oracle", "bocd")
+
+    def __init__(self, mobility: MobilityModel, policy: str = "bocd", *,
+                 sample_dt: float = 0.5, hazard: float = 1 / 20.0,
+                 hysteresis: float = 0.05, min_gap_s: float = 1.0):
+        assert policy in self.POLICIES, f"unknown handover policy {policy!r}"
+        self.mobility = mobility
+        self.policy = policy
+        self.sample_dt = sample_dt
+        self.hazard = hazard
+        self.hysteresis = hysteresis
+        self.min_gap_s = min_gap_s
+        self.reset()
+
+    def reset(self):
+        self.detectors: Dict[int, BandwidthStateDetector] = {}
+        self._last_fire: Dict[int, float] = {}
+
+    # ------------------------------------------------------------ engine API
+    def observe(self, did: int, now: float,
+                serving: Tuple[int, ...] = ()) -> bool:
+        """One bandwidth sample at virtual time ``now``; ``serving`` lists
+        the distinct edges currently hosting this device's in-flight
+        requests (a device with several concurrent requests may be bound to
+        several).  True => the engine should re-plan the device's in-flight
+        work."""
+        if self.policy == "none":
+            return False
+        if self.policy == "oracle":
+            if not serving:
+                return False
+            near = self.mobility.nearest(did, now)
+            d_near = self.mobility.distance(did, near, now)
+            fire = any(
+                eid != near and d_near <= (1.0 - self.hysteresis) *
+                self.mobility.distance(did, eid, now)
+                for eid in serving)
+        else:
+            # bocd: sample the most at-risk link the device is actually
+            # using (the farthest serving edge — the one whose degradation
+            # is hurting in-flight work), falling back to the best signal
+            # while idle so the detector's history stays contiguous; a state
+            # transition is a MAP run-length collapse (a new entry in the
+            # detector's change log, NOT its float return — that is the
+            # posterior state mean)
+            if serving:
+                eid = max(serving, key=lambda e:
+                          (self.mobility.distance(did, e, now), e))
+            else:
+                eid = self.mobility.nearest(did, now)
+            det = self.detectors.get(did)
+            if det is None:
+                det = self.detectors[did] = BandwidthStateDetector(
+                    hazard=self.hazard)
+            n_before = len(det.changes)
+            det.update(self.mobility.bw(did, eid, now) / MBPS)
+            fire = len(det.changes) > n_before and bool(serving)
+        if not fire:
+            return False
+        # rate-limit both policies: while a condition persists (a nearer
+        # edge exists but replan keeps deciding to stay put), re-searching
+        # every sample is wasted compute
+        last = self._last_fire.get(did)
+        if last is not None and now - last < self.min_gap_s:
+            return False
+        self._last_fire[did] = now
+        return True
+
+
+def make_mobile_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
+                      speed: float = 0.1, horizon_s: float = 60.0,
+                      area: float = 1.0, edge_capacity: int = 8,
+                      hetero_edges: bool = True,
+                      max_edge_slowdown: float = 3.0,
+                      device_slowdown_range=(0.8, 2.5),
+                      peak_mbps: float = 6.0, floor_mbps: float = 0.05,
+                      d_ref: float = 0.25, path_exp: float = 3.0,
+                      noise_sigma: float = 0.1, noise_dt: float = 0.5,
+                      edge_bw_mbps: float = 400.0
+                      ) -> Tuple[FleetTopology, MobilityModel]:
+    """Sample a reproducible *mobile* fleet: edges on a grid over
+    ``[0, area]^2``, devices on random-waypoint trajectories at ``speed``
+    (jittered +/-50% per device), per-pair bandwidth from the path-loss law.
+    Device links are :class:`MobileLink`s so placement-only routers keep
+    working unchanged."""
+    rng = np.random.default_rng(seed)
+    pos = edge_grid(num_edges, area)
+    trajs = [random_trajectory(rng, speed * float(rng.uniform(0.5, 1.5)),
+                               horizon_s, area)
+             for _ in range(num_devices)]
+    slots = max(int(np.ceil(horizon_s / noise_dt)) + 1, 1)
+    noise = np.clip(rng.normal(1.0, noise_sigma,
+                               (num_devices, slots)), 0.3, 1.7) \
+        if noise_sigma > 0 else None
+    mobility = MobilityModel(edge_pos=pos, trajectories=trajs,
+                             peak_bps=peak_mbps * MBPS,
+                             floor_bps=floor_mbps * MBPS,
+                             d_ref=d_ref, path_exp=path_exp,
+                             noise=noise, noise_dt=noise_dt)
+    lo, hi = device_slowdown_range
+    devices = [DeviceNode(i, MobileLink(mobility, i),
+                          slowdown=float(rng.uniform(lo, hi)))
+               for i in range(num_devices)]
+    speeds = np.linspace(1.0, max_edge_slowdown, num_edges) if hetero_edges \
+        else np.ones(num_edges)
+    edges = [EdgeNode(j, capacity=edge_capacity, speed=float(speeds[j]))
+             for j in range(num_edges)]
+    topo = FleetTopology(devices, edges, edge_bw_bps=edge_bw_mbps * 125e3)
+    return topo, mobility

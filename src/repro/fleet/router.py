@@ -83,6 +83,21 @@ class BandwidthAwareRouter(Router):
         return min(topo.edges, key=lambda e: (est(e), e.eid))
 
 
+class NearestEdgeRouter(Router):
+    """Mobility-aware placement: route to the geographically nearest edge
+    (the one the device's radio sees the strongest signal from).  Requires a
+    :class:`~repro.fleet.mobility.MobilityModel`; pair it with a
+    :class:`~repro.fleet.mobility.HandoverController` on the engine to keep
+    that binding fresh as devices move (docs/handover.md)."""
+    name = "nearest"
+
+    def __init__(self, mobility):
+        self.mobility = mobility
+
+    def route(self, req, device, topo, now) -> EdgeNode:
+        return topo.edges[self.mobility.nearest(device.did, now)]
+
+
 class JointRouter(Router):
     """Joint (edge-set, partition, exit) routing: delegates the full search
     to :class:`~repro.fleet.joint.JointPlanner` and returns an edge *set* —
@@ -103,7 +118,11 @@ class JointRouter(Router):
 
 
 def make_router(name: str, stepper=None, topo=None,
-                max_coop: int = 3, prefill_div: int = 8) -> Router:
+                max_coop: int = 3, prefill_div: int = 8,
+                mobility=None) -> Router:
+    """Router registry (docs/fleet.md has the policy table): resolves the
+    policy names accepted by ``FleetEngine(router=...)`` and the
+    benchmarks' ``--router`` flags."""
     if name in ("rr", "round-robin"):
         return RoundRobinRouter()
     if name in ("jsq", "join-shortest-queue"):
@@ -111,6 +130,10 @@ def make_router(name: str, stepper=None, topo=None,
     if name in ("bw", "bandwidth", "bandwidth-aware"):
         assert stepper is not None, "bandwidth-aware routing needs a stepper"
         return BandwidthAwareRouter(stepper)
+    if name in ("nearest", "nearest-edge"):
+        assert mobility is not None, \
+            "nearest-edge routing needs a MobilityModel (make_mobile_fleet)"
+        return NearestEdgeRouter(mobility)
     if name in ("joint", "coop", "joint-coop"):
         assert stepper is not None and topo is not None, \
             "joint routing needs a stepper and the fleet topology"

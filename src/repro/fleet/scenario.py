@@ -44,3 +44,41 @@ def smoke_lm_scenario(arch: str = "llama3.2-1b", *,
     model = Model(cfg)
     params = model.init_params(jax.random.key(0), dtype=jnp.float32)
     return cfg, graph, planner, model, params
+
+
+def smoke_mobility_scenario(num_devices: int, num_edges: int = 4, *,
+                            seed: int = 0, speed: float = 0.1,
+                            policy: str = "bocd", horizon_s: float = 60.0,
+                            arch: str = "llama3.2-1b",
+                            latency_req_s: float = 0.5,
+                            result_kb: float = 4.0,
+                            sample_dt: float = 0.5, hazard: float = 1 / 20.0,
+                            **mobile_kwargs):
+    """Canonical mobility scenario: the smoke LM stack on a *mobile* fleet.
+
+    Wires the three mobility pieces together (trajectories + position->
+    bandwidth geography via :func:`~repro.fleet.mobility.make_mobile_fleet`,
+    BOCD/oracle trigger via
+    :class:`~repro.fleet.mobility.HandoverController`) around the same graph
+    and planner as :func:`smoke_lm_scenario`, so the static and mobile
+    benchmarks compare the same model.  ``policy='none'`` returns
+    ``controller=None`` — the no-handover baseline still moves (bandwidth
+    to the serving edge degrades) but never migrates.
+
+    Returns ``(cfg, graph, planner, topo, mobility, controller)``; feed the
+    last three to ``FleetEngine(mobility=..., handover=..., router='nearest')``.
+    Used by ``benchmarks/fleet_scale.py --mobility`` and the handover
+    invariant tests."""
+    from repro.fleet.mobility import HandoverController, make_mobile_fleet
+    cfg, graph, planner = smoke_lm_scenario(arch,
+                                            latency_req_s=latency_req_s)
+    # streaming per-token downlink (multimodal features back to the device):
+    # decode rounds exercise the wireless link every token, so a degrading
+    # serving link hurts *in-flight* requests — the regime handover rescues
+    graph.result_bytes = int(result_kb * 1024)
+    topo, mobility = make_mobile_fleet(num_devices, num_edges, seed=seed,
+                                       speed=speed, horizon_s=horizon_s,
+                                       **mobile_kwargs)
+    controller = None if policy == "none" else HandoverController(
+        mobility, policy=policy, sample_dt=sample_dt, hazard=hazard)
+    return cfg, graph, planner, topo, mobility, controller

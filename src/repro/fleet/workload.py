@@ -30,6 +30,8 @@ DEFAULT_TENANTS = (
 
 @dataclass
 class FleetRequest:
+    """One request in a fleet simulation: identity + SLO contract up top,
+    engine-owned runtime state below (reset by every ``FleetEngine.run``)."""
     rid: int
     device: int
     tenant: str
@@ -49,6 +51,12 @@ class FleetRequest:
     cache: object = None
     next_tok: object = None
     tokens: List[int] = field(default_factory=list)
+    # --- mobility / handover state (docs/handover.md) ---
+    replan_pending: bool = False  # policy fired; resolve at round boundary
+    migrating: bool = False       # state snapshot in flight on the backbone
+    coop_counted: bool = False    # holds coop_inflight slots at secondaries
+    handovers: int = 0            # completed mid-request migrations
+    migrated_bytes: int = 0       # state bytes shipped across all handovers
 
     @property
     def deadline_s(self) -> float:

@@ -1,15 +1,19 @@
 """Property-based invariants of the fleet simulator, run against every
-router (including the joint multi-edge planner):
+router (including the joint multi-edge planner) and, for mobile fleets,
+against the handover policies:
 
-* every submitted request completes exactly once,
-* the virtual clock is monotone per event pop,
+* every submitted request completes exactly once (also under forced
+  mid-request migration),
+* the virtual clock is monotone per event pop (also across handovers),
 * edge backlogs (queue + active + cooperative spans) never go negative and
   drain to zero,
-* metrics conserve the request count.
+* metrics conserve the request count, and migrated handover bytes are
+  non-negative and conserved against the backbone transfer events,
+* BOCD replan timing is deterministic (golden-pinned).
 
 With hypothesis installed (CI) the properties are fuzzed over fleet shapes
 and workloads; without it the deterministic seed matrix below still covers
-all routers.
+all routers and policies.
 """
 import functools
 
@@ -17,9 +21,17 @@ import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 from repro.fleet import FleetEngine, make_fleet, make_workload, \
-    smoke_lm_scenario
+    smoke_lm_scenario, smoke_mobility_scenario
+from repro.fleet.workload import TenantClass
 
 ROUTERS = ("round-robin", "jsq", "bandwidth-aware", "joint")
+HANDOVER_POLICIES = ("oracle", "bocd")
+# long-lived streaming requests: decode spans many sampling intervals, so
+# the handover policies genuinely fire mid-request
+STREAM_TENANTS = (
+    TenantClass("stream", slo_s=2.0, max_new_tokens=48, weight=0.7),
+    TenantClass("batch", slo_s=6.0, max_new_tokens=96, weight=0.3),
+)
 
 
 @functools.lru_cache(maxsize=1)
@@ -105,10 +117,104 @@ def _run_checked(router, *, nd, ne, rate, seed, horizon=8.0,
     return metrics
 
 
+def _run_mobility_checked(policy, *, nd=10, ne=4, rate=6.0, speed=0.5,
+                          seed=0, horizon=10.0):
+    """Mobile-fleet variant of :func:`_run_checked`: nearest-edge routing,
+    random-waypoint motion, the given handover policy — same monotone-clock
+    and backlog proxies, same exactly-once / drain assertions, plus the
+    handover-specific conservation checks."""
+    _, graph, planner, topo, mob, ctrl = smoke_mobility_scenario(
+        nd, ne, seed=seed, speed=speed, policy=policy,
+        horizon_s=horizon + 30.0, floor_mbps=0.1, noise_sigma=0.08)
+    wl = make_workload(nd, rate_hz=rate, horizon_s=horizon, seed=seed + 1,
+                       arrival="poisson", device_skew=0.5,
+                       tenants=STREAM_TENANTS)
+    eng = FleetEngine(topo, graph, planner, router="nearest",
+                      mobility=mob, handover=ctrl)
+
+    import repro.fleet.engine as fe
+    orig = fe.EventQueue
+    fe.EventQueue = lambda: _MonotoneQueue(orig(), topo)
+    try:
+        metrics = eng.run(wl)
+    finally:
+        fe.EventQueue = orig
+
+    # ---- completion exactly once + request-count conservation: a migrated
+    # request must neither drop nor complete at both its edges
+    rids = sorted(r.rid for r in metrics.records)
+    assert rids == sorted(r.rid for r in wl), \
+        "every submitted request must complete exactly once under migration"
+    assert len(metrics.records) == len(wl)
+    # ---- the fleet drains: no stranded slots, queue entries, or owed tokens
+    for e in topo.edges:
+        assert e.backlog() == 0
+        assert e.coop_inflight == 0
+        assert e.tokens_owed == 0
+    # ---- migrated bytes: non-negative, conserved against transfer events
+    # (nearest routing + single-edge replan => the backbone carries nothing
+    # but handover state snapshots)
+    assert all(h[3] >= 0 for h in metrics.handover_log)
+    assert metrics.migrated_bytes_total == \
+        sum(r.migrated_bytes for r in metrics.records)
+    assert metrics.migrated_bytes_total == \
+        sum(metrics.transfer_bytes.values())
+    assert metrics.handover_count == \
+        sum(r.handovers for r in metrics.records)
+    for r in metrics.records:
+        assert r.finish_s >= r.arrival_s
+        assert r.latency_s >= 0.0
+        assert r.migrated_bytes >= 0
+        if r.handovers == 0:
+            assert r.migrated_bytes == 0
+    return metrics
+
+
 @pytest.mark.parametrize("router", ROUTERS)
 @pytest.mark.parametrize("seed", [0, 7])
 def test_invariants_seed_matrix(router, seed):
     _run_checked(router, nd=12, ne=3, rate=14.0, seed=seed)
+
+
+@pytest.mark.parametrize("policy", HANDOVER_POLICIES)
+@pytest.mark.parametrize("seed", [0, 5])
+def test_handover_invariants(policy, seed):
+    """Fast mobility forces mid-request migrations; every invariant the
+    static fleet holds must survive them (exactly-once, monotone clock via
+    _MonotoneQueue, byte conservation)."""
+    m = _run_mobility_checked(policy, seed=seed)
+    assert m.handover_count > 0, \
+        "the forced-migration scenario must actually migrate"
+
+
+def test_handover_mid_request_state_ships():
+    """At least one migration must move a *prefilled* request (non-zero
+    state bytes over the backbone), not just re-route queued work."""
+    m = _run_mobility_checked("oracle", speed=0.6, seed=1)
+    assert m.migrated_bytes_total > 0
+    moved = [r for r in m.records if r.handovers > 0]
+    assert any(r.migrated_bytes > 0 for r in moved)
+
+
+def test_no_handover_policy_never_migrates():
+    m = _run_mobility_checked("none", speed=0.6, seed=1)
+    assert m.handover_count == 0
+    assert m.migrated_bytes_total == 0
+    assert sum(m.transfer_bytes.values()) == 0
+
+
+@pytest.mark.parametrize("policy", ("none",) + HANDOVER_POLICIES)
+def test_mobility_rerun_determinism(policy):
+    """Stateful handover machinery (BOCD posteriors, attachments, sampling
+    grid) must reset between runs: same engine, same workload => identical
+    summaries."""
+    _, graph, planner, topo, mob, ctrl = smoke_mobility_scenario(
+        8, 3, seed=11, speed=0.4, policy=policy, horizon_s=40.0)
+    wl = make_workload(8, rate_hz=6.0, horizon_s=8.0, seed=12,
+                       tenants=STREAM_TENANTS)
+    eng = FleetEngine(topo, graph, planner, router="nearest",
+                      mobility=mob, handover=ctrl)
+    assert eng.run(wl).summary() == eng.run(wl).summary()
 
 
 @pytest.mark.parametrize("router", ROUTERS)
@@ -156,6 +262,35 @@ def test_joint_matches_submitted_set_under_skew(seed):
     and non-negative cooperative in-flight accounting."""
     m = _run_checked("joint", nd=10, ne=4, rate=25.0, seed=seed, horizon=5.0)
     assert all(len(r.edges) <= 4 for r in m.records)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 16),
+       speed=st.floats(min_value=0.0, max_value=1.0),
+       policy=st.sampled_from(HANDOVER_POLICIES))
+def test_handover_invariants_property(seed, speed, policy):
+    """Fuzz mobility speed and seeds: exactly-once, drain, monotone clock
+    and byte conservation hold whether migrations fire or not."""
+    _run_mobility_checked(policy, nd=6, ne=3, rate=5.0, speed=speed,
+                          seed=seed, horizon=6.0)
+
+
+# ---- golden regression: BOCD replan timing is deterministic -------------
+# Pinned from the fixed scenario below: every (time, src, dst) of each
+# migration the BOCD policy triggers.  Any change to the sampling grid, the
+# detector parameters, the replan estimates, or the event ordering that
+# shifts handover timing must show up here (and be justified in the diff).
+GOLDEN_BOCD_HANDOVERS = [
+    (4.528111, 3, 0), (5.503407, 2, 0), (6.560989, 2, 0), (6.560946, 2, 0),
+    (7.125527, 3, 0), (8.503998, 1, 2), (10.515674, 3, 0), (11.024732, 3, 1),
+]
+
+
+def test_bocd_replan_timing_golden():
+    m = _run_mobility_checked("bocd", nd=10, ne=4, rate=6.0, speed=0.5,
+                              seed=3, horizon=10.0)
+    log = [(round(t, 6), src, dst) for t, src, dst, _ in m.handover_log]
+    assert log == GOLDEN_BOCD_HANDOVERS
 
 
 if HAVE_HYPOTHESIS:

@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Intra-repo markdown link checker (CI docs job).
+
+Scans every tracked ``*.md`` file for inline links/images and verifies that
+relative targets resolve to an existing file or directory in the repo.
+External schemes (http/https/mailto) and pure in-page anchors are skipped;
+anchors on relative targets are stripped before the existence check.
+
+Also asserts the docs index invariant: every ``docs/*.md`` page is
+reachable from ``docs/README.md`` (ISSUE 3 acceptance criterion).
+
+Exit code 0 = all links resolve; 1 = broken links (listed on stderr).
+
+Run:  python tools/check_docs_links.py [root]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# inline markdown links/images: [text](target) — tolerates titles after a
+# space; reference-style links are not used in this repo
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+SKIP_DIRS = {".git", ".github", "__pycache__", ".pytest_cache"}
+
+
+def md_files(root: Path):
+    for p in sorted(root.rglob("*.md")):
+        if not SKIP_DIRS.intersection(p.relative_to(root).parts):
+            yield p
+
+
+def check_links(root: Path):
+    broken = []
+    for md in md_files(root):
+        for m in LINK_RE.finditer(md.read_text(encoding="utf-8")):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (root / path.lstrip("/")) if path.startswith("/") \
+                else (md.parent / path)
+            if not resolved.exists():
+                broken.append((md.relative_to(root), target))
+    return broken
+
+
+def check_docs_index(root: Path):
+    """Every docs/*.md page must be linked from docs/README.md."""
+    docs = root / "docs"
+    index = docs / "README.md"
+    missing = []
+    if not index.exists():
+        return [("docs/README.md", "<docs index missing>")]
+    linked = {t.split("#", 1)[0] for t in LINK_RE.findall(
+        index.read_text(encoding="utf-8"))}
+    for page in sorted(docs.glob("*.md")):
+        if page.name != "README.md" and page.name not in linked:
+            missing.append((Path("docs/README.md"),
+                            f"<no link to {page.name}>"))
+    return missing
+
+
+def main() -> int:
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 \
+        else Path(__file__).resolve().parent.parent
+    problems = check_links(root) + check_docs_index(root)
+    n_files = len(list(md_files(root)))
+    if problems:
+        for md, target in problems:
+            print(f"BROKEN  {md}: {target}", file=sys.stderr)
+        print(f"{len(problems)} broken link(s) across {n_files} markdown "
+              f"files", file=sys.stderr)
+        return 1
+    print(f"all intra-repo markdown links resolve ({n_files} files); "
+          f"docs/README.md indexes every docs page")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
