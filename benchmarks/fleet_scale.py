@@ -1,11 +1,11 @@
 """Fleet-scale serving benchmark: SLO attainment vs. fleet size and router
 policy under a skewed diurnal workload on heterogeneous edges.
 
-Each cell is a deterministic virtual-time simulation (``repro.fleet``):
-N devices with independent bandwidth traces and per-device slowdowns, M
-edges with a 4x speed spread, continuous batching per edge, Edgent planning
-per device (shared plan cache).  The same seed always reproduces identical
-numbers — the benchmark re-runs one cell to prove it.
+Each cell is one declarative ``repro.sim`` scenario (docs/api.md): the
+sweeps edit the registered ``smoke-lm`` / ``smoke-mobility`` specs
+(devices, router, speed, policy, seed) and run them through ``Simulation``.
+The same seed always reproduces identical numbers — the benchmark re-runs
+one cell to prove it.
 
 Run:  PYTHONPATH=src python benchmarks/fleet_scale.py
       PYTHONPATH=src python benchmarks/fleet_scale.py --coop
@@ -15,16 +15,19 @@ from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import replace
 
-from repro.fleet import (FleetEngine, make_fleet, make_workload,
-                         smoke_lm_scenario, smoke_mobility_scenario)
-from repro.fleet.workload import TenantClass
+from repro.sim import Simulation, get_scenario
+
+# single source of truth: the registered smoke specs (repro.sim.registry)
+_LM = get_scenario("smoke-lm")
+_MOB = get_scenario("smoke-mobility")
 
 ROUTERS = ("round-robin", "jsq", "bandwidth-aware")
-NUM_EDGES = 4
-RATE_PER_DEVICE_HZ = 1.2
-HORIZON_S = 30.0
-SEED = 2
+NUM_EDGES = _LM.topology.num_edges
+RATE_PER_DEVICE_HZ = _LM.workload.rate_per_device_hz
+HORIZON_S = _LM.workload.horizon_s
+SEED = _LM.seed
 
 # ---- mobility sweep (--mobility): long-lived streaming requests, so the
 # wireless link is exercised every decode round and a device walking away
@@ -32,34 +35,24 @@ SEED = 2
 MOBILITY_POLICIES = ("none", "oracle", "bocd")
 MOBILITY_SPEEDS = (0.0, 0.1, 0.25, 0.5)     # area units / s
 MOBILITY_DEVICES = 48
-MOBILITY_RATE_HZ = 0.2                       # per device per second
-MOBILITY_HORIZON_S = 25.0
-MOBILITY_TENANTS = (
-    TenantClass("interactive", slo_s=1.0, max_new_tokens=32, weight=0.5),
-    TenantClass("standard", slo_s=3.0, max_new_tokens=64, weight=0.35),
-    TenantClass("batch", slo_s=8.0, max_new_tokens=128, weight=0.15),
-)
+MOBILITY_RATE_HZ = _MOB.workload.rate_per_device_hz
+MOBILITY_HORIZON_S = _MOB.workload.horizon_s
+SMOKE_DEVICES = _LM.topology.num_devices     # 40: the registered smoke cells
 
 
-def run_cell(graph, planner, num_devices: int, router: str, *,
-             seed: int = SEED, rate_hz: float | None = None) -> dict:
-    topo = make_fleet(num_devices, NUM_EDGES, seed=seed, edge_capacity=8,
-                      lo_mbps=0.1, hi_mbps=6.0, max_edge_slowdown=4.0)
-    wl = make_workload(num_devices,
-                       rate_hz=rate_hz if rate_hz is not None
-                       else RATE_PER_DEVICE_HZ * num_devices,
-                       horizon_s=HORIZON_S, seed=seed + 1,
-                       arrival="diurnal", device_skew=1.0)
-    eng = FleetEngine(topo, graph, planner, router=router)
-    return eng.run(wl).summary()
+def run_cell(num_devices: int, router: str, *, seed: int = SEED) -> dict:
+    base = get_scenario("smoke-lm")
+    spec = replace(base, seed=seed,
+                   topology=replace(base.topology, num_devices=num_devices),
+                   router=replace(base.router, name=router))
+    return Simulation(spec).run().summary()
 
 
 def run_coop(args):
     """--coop: cooperative multi-edge joint planning vs single-edge
     bandwidth-aware routing, SLO attainment per fleet size.  The acceptance
     gate: joint >= bandwidth-aware at 100 devices on the default seed."""
-    _, graph, planner = smoke_lm_scenario()
-    sizes = [40] if args.smoke else args.sizes
+    sizes = [SMOKE_DEVICES] if args.smoke else args.sizes
     routers = ("bandwidth-aware", "joint")
     print(f"cooperative multi-edge planning: {NUM_EDGES} edges (speed "
           f"1x..4x), diurnal arrivals @ {RATE_PER_DEVICE_HZ}/device/s, "
@@ -73,8 +66,7 @@ def run_coop(args):
         row = {}
         for router in routers:
             t0 = time.perf_counter()
-            row[router] = (run_cell(graph, planner, nd, router,
-                                    seed=args.seed),
+            row[router] = (run_cell(nd, router, seed=args.seed),
                            time.perf_counter() - t0)
         joint = row["joint"][0]
         share = joint["coop_requests"] / max(joint["requests"], 1)
@@ -88,8 +80,8 @@ def run_coop(args):
                     joint["slo_attainment"])
 
     # ---- determinism: same seed -> bit-identical summary
-    a = run_cell(graph, planner, sizes[0], "joint", seed=args.seed)
-    b = run_cell(graph, planner, sizes[0], "joint", seed=args.seed)
+    a = run_cell(sizes[0], "joint", seed=args.seed)
+    b = run_cell(sizes[0], "joint", seed=args.seed)
     assert a == b, "same seed must reproduce identical metrics"
     print("\ndeterminism check: identical summaries on re-run  [ok]")
     if gate is not None and args.seed == SEED:
@@ -105,16 +97,12 @@ def run_mobility_cell(nd: int, speed: float, policy: str, *,
     """One deterministic mobility simulation: ``nd`` devices random-waypoint
     walking at ``speed`` over a 4-edge geography, nearest-edge routing, the
     given handover policy driving mid-request migration."""
-    _, graph, planner, topo, mobility, ctrl = smoke_mobility_scenario(
-        nd, NUM_EDGES, seed=seed + 1, speed=speed, policy=policy,
-        horizon_s=MOBILITY_HORIZON_S + 35.0, floor_mbps=0.1,
-        noise_sigma=0.08)
-    wl = make_workload(nd, rate_hz=MOBILITY_RATE_HZ * nd,
-                       horizon_s=MOBILITY_HORIZON_S, seed=seed + 2,
-                       device_skew=0.5, tenants=MOBILITY_TENANTS)
-    eng = FleetEngine(topo, graph, planner, router="nearest",
-                      mobility=mobility, handover=ctrl)
-    return eng.run(wl).summary()
+    base = get_scenario("smoke-mobility")
+    spec = replace(base, seed=seed + 1,
+                   topology=replace(base.topology, num_devices=nd,
+                                    speed=speed),
+                   mobility=replace(base.mobility, policy=policy))
+    return Simulation(spec).run().summary()
 
 
 def run_mobility(args):
@@ -122,8 +110,8 @@ def run_mobility(args):
     {no-handover, oracle-replan, BOCD-replan} x mobility speed; the
     acceptance gate requires BOCD >= no-handover at every speed with the
     gap widening as devices move faster."""
-    nd = 40 if args.smoke else MOBILITY_DEVICES
-    speeds = [0.25] if args.smoke else list(args.speeds)
+    nd = _MOB.topology.num_devices if args.smoke else MOBILITY_DEVICES
+    speeds = [_MOB.topology.speed] if args.smoke else list(args.speeds)
     print(f"mobility-aware handover: {nd} devices random-waypoint over a "
           f"{NUM_EDGES}-edge geography, streaming tenants @ "
           f"{MOBILITY_RATE_HZ}/device/s, horizon {MOBILITY_HORIZON_S}s, "
@@ -192,8 +180,6 @@ def main():
         run_mobility(args)
         return
 
-    _, graph, planner = smoke_lm_scenario()
-
     print(f"fleet-scale serving: {NUM_EDGES} edges (speed 1x..4x), diurnal "
           f"arrivals @ {RATE_PER_DEVICE_HZ}/device/s, horizon {HORIZON_S}s, "
           f"seed {args.seed}")
@@ -205,7 +191,7 @@ def main():
         row = []
         for router in ROUTERS:
             t0 = time.perf_counter()
-            s = run_cell(graph, planner, nd, router, seed=args.seed)
+            s = run_cell(nd, router, seed=args.seed)
             row.append((router, s, time.perf_counter() - t0))
             last[router] = s
         rr_cell = row[0][1]["slo_attainment"]
@@ -229,8 +215,8 @@ def main():
           f"partitions: {last['bandwidth-aware']['partition_histogram']}")
 
     # ---- determinism: same seed -> bit-identical summary
-    a = run_cell(graph, planner, args.sizes[0], "jsq", seed=args.seed)
-    b = run_cell(graph, planner, args.sizes[0], "jsq", seed=args.seed)
+    a = run_cell(args.sizes[0], "jsq", seed=args.seed)
+    b = run_cell(args.sizes[0], "jsq", seed=args.seed)
     assert a == b, "same seed must reproduce identical metrics"
     print("\ndeterminism check: identical summaries on re-run  [ok]")
 

@@ -1,32 +1,38 @@
 """Fleet serving end to end, with the real (smoke-scale) model in the loop.
 
 A small fleet — 8 devices with independent LTE-like links, 2 heterogeneous
-edges — serves a Poisson multi-tenant stream.  Timing is virtual (latency
-models on the event heap); token values come from actual decode: each
-admitted request carries its own B=1 cache and steps through the jitted
-per-exit variants shared fleet-wide, so deadline demotion visibly changes
-which exit a request decodes through.
+edges — serves a Poisson multi-tenant stream, wired entirely from one
+declarative ``repro.sim`` spec (docs/api.md).  Timing is virtual (latency
+models on the event heap); token values come from actual decode
+(``EngineSpec(real_decode=True)``): each admitted request carries its own
+B=1 cache and steps through the jitted per-exit variants shared fleet-wide,
+so deadline demotion visibly changes which exit a request decodes through.
 
 Run:  PYTHONPATH=src python examples/serve_fleet.py
 """
-import jax.numpy as jnp
+from repro.sim import (EngineSpec, RouterSpec, ScenarioSpec, Simulation,
+                       TopologySpec, WorkloadSpec)
 
-from repro.fleet import FleetEngine, make_fleet, make_workload, smoke_lm_scenario
+SPEC = ScenarioSpec(
+    name="serve-fleet",
+    description="small LTE fleet with real decode in the loop",
+    seed=0,
+    topology=TopologySpec(num_devices=8, num_edges=2, trace="lte",
+                          edge_capacity=4, max_edge_slowdown=2.0),
+    workload=WorkloadSpec(rate_hz=6.0, horizon_s=10.0, device_skew=0.5,
+                          prompt_len=6),
+    router=RouterSpec(name="bandwidth-aware"),
+    engine=EngineSpec(real_decode=True, dtype="float32"))
 
 
 def main():
-    cfg, graph, planner, model, params = smoke_lm_scenario(with_model=True)
-    topo = make_fleet(8, 2, seed=0, trace="lte", edge_capacity=4,
-                      max_edge_slowdown=2.0)
-    wl = make_workload(8, rate_hz=6.0, horizon_s=10.0, seed=1,
-                       arrival="poisson", device_skew=0.5,
-                       vocab_size=cfg.vocab_size, prompt_len=6)
-    print(f"fleet: {topo.num_devices} devices x {topo.num_edges} edges, "
-          f"{len(wl)} requests over 10s (virtual)")
+    sim = Simulation(SPEC)
+    sc = sim.build()
+    print(f"fleet: {sc.topo.num_devices} devices x {sc.topo.num_edges} "
+          f"edges, {len(sc.workload)} requests over "
+          f"{SPEC.workload.horizon_s:.0f}s (virtual)")
 
-    eng = FleetEngine(topo, graph, planner, router="bandwidth-aware",
-                      model=model, params=params, dtype=jnp.float32)
-    metrics = eng.run(wl)
+    metrics = sim.run()
     s = metrics.summary()
 
     print(f"\nSLO attainment: {s['slo_attainment']:.2%}   "
@@ -37,7 +43,7 @@ def main():
     print(f"exits: {s['exit_histogram']}   partitions: {s['partition_histogram']}")
 
     print("\n rid  tenant       dev edge  exit  latency(ms)  met  tokens")
-    by_rid = {r.rid: r for r in wl}
+    by_rid = {r.rid: r for r in sc.workload}
     for rec in metrics.records[:10]:
         toks = by_rid[rec.rid].tokens
         print(f"{rec.rid:4d}  {rec.tenant:<11} {rec.device:3d} {rec.edge:4d} "

@@ -6,6 +6,11 @@ through a shared ``CoInferenceStepper``.  Cooperative multi-edge spans and
 joint (edge-set, partition, exit) planning live in ``fleet.coop`` /
 ``fleet.joint`` (docs/coop.md); device mobility and BOCD-driven mid-request
 handover live in ``fleet.mobility`` (docs/handover.md).
+
+Experiments are declared one layer up: ``repro.sim`` (docs/api.md) wires
+topology + workload + planner + router + engine from a serializable
+``ScenarioSpec``.  The ``smoke_*_scenario`` tuple helpers re-exported here
+are deprecated shims over that API.
 """
 from repro.fleet.cluster import (DeviceNode, EdgeNode, FleetTopology,  # noqa: F401
                                  TraceLink, make_fleet)

@@ -61,7 +61,7 @@ class FleetEngine:
                  prefill_div: int = 8,
                  mobility: Optional[MobilityModel] = None,
                  handover: Union[HandoverController, str, None] = None,
-                 replan_max_coop: int = 1):
+                 replan_max_coop: int = 1, max_coop: int = 3):
         self.topo = topo
         self.model, self.params = model, params
         self.dtype = dtype
@@ -73,7 +73,17 @@ class FleetEngine:
                                           dynamic=dynamic)
         self.mobility = mobility
         if isinstance(handover, str):
-            assert mobility is not None, "handover policies need a mobility model"
+            if handover not in HandoverController.POLICIES:
+                raise ValueError(
+                    f"unknown handover policy {handover!r}: expected one "
+                    f"of {', '.join(HandoverController.POLICIES)} (see "
+                    "repro.fleet.mobility.HandoverController)")
+            if mobility is None:
+                raise ValueError(
+                    f"handover={handover!r} needs a mobility model: pass "
+                    "mobility= alongside the policy name (from "
+                    "make_mobile_fleet, or build the engine via a "
+                    "repro.sim mobile topology)")
             handover = HandoverController(mobility, policy=handover)
         self.handover = handover
         # mid-request replanning searches (edge set, partition, exit) with
@@ -86,8 +96,11 @@ class FleetEngine:
         if router is None:
             router = RoundRobinRouter()
         elif isinstance(router, str):
+            # make_router validates the name against the registry and
+            # raises ValueError (with the known names) on a bad one
             router = make_router(router, stepper=self.stepper, topo=topo,
-                                 prefill_div=prefill_div, mobility=mobility)
+                                 max_coop=max_coop, prefill_div=prefill_div,
+                                 mobility=mobility)
         self.router = router
         self._hop_cache = {}       # (exit, assign) -> hop_schedule timeline
 

@@ -185,7 +185,9 @@ class HandoverController:
     def __init__(self, mobility: MobilityModel, policy: str = "bocd", *,
                  sample_dt: float = 0.5, hazard: float = 1 / 20.0,
                  hysteresis: float = 0.05, min_gap_s: float = 1.0):
-        assert policy in self.POLICIES, f"unknown handover policy {policy!r}"
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown handover policy {policy!r}: expected "
+                             f"one of {', '.join(self.POLICIES)}")
         self.mobility = mobility
         self.policy = policy
         self.sample_dt = sample_dt

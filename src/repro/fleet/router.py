@@ -117,28 +117,54 @@ class JointRouter(Router):
         return topo.edges[dec.assign.eids[0]]
 
 
+# alias -> canonical policy name; the single source of truth for which
+# router strings `FleetEngine(router=...)`, `RouterSpec`, and the CLI accept
+ROUTER_ALIASES = {
+    "rr": "round-robin", "round-robin": "round-robin",
+    "jsq": "jsq", "join-shortest-queue": "jsq",
+    "bw": "bandwidth-aware", "bandwidth": "bandwidth-aware",
+    "bandwidth-aware": "bandwidth-aware",
+    "nearest": "nearest", "nearest-edge": "nearest",
+    "joint": "joint", "coop": "joint", "joint-coop": "joint",
+}
+
+
 def make_router(name: str, stepper=None, topo=None,
                 max_coop: int = 3, prefill_div: int = 8,
                 mobility=None) -> Router:
     """Router registry (docs/fleet.md has the policy table): resolves the
-    policy names accepted by ``FleetEngine(router=...)`` and the
-    benchmarks' ``--router`` flags."""
-    if name in ("rr", "round-robin"):
+    policy names accepted by ``FleetEngine(router=...)``,
+    ``repro.sim.RouterSpec``, and the benchmarks' ``--router`` flags.
+    Unknown names and missing dependencies raise ``ValueError``."""
+    canon = ROUTER_ALIASES.get(name)
+    if canon is None:
+        raise ValueError(f"unknown router {name!r}: expected one of "
+                         f"{sorted(ROUTER_ALIASES)}")
+    if canon == "round-robin":
         return RoundRobinRouter()
-    if name in ("jsq", "join-shortest-queue"):
+    if canon == "jsq":
         return JoinShortestQueueRouter()
-    if name in ("bw", "bandwidth", "bandwidth-aware"):
-        assert stepper is not None, "bandwidth-aware routing needs a stepper"
+    if canon == "bandwidth-aware":
+        if stepper is None:
+            raise ValueError("bandwidth-aware routing needs a "
+                             "CoInferenceStepper (FleetEngine passes its "
+                             "own when given the name)")
         return BandwidthAwareRouter(stepper)
-    if name in ("nearest", "nearest-edge"):
-        assert mobility is not None, \
-            "nearest-edge routing needs a MobilityModel (make_mobile_fleet)"
+    if canon == "nearest":
+        if mobility is None:
+            raise ValueError(
+                "nearest-edge routing needs a MobilityModel: build the "
+                "fleet with make_mobile_fleet or a repro.sim mobile "
+                "topology and pass FleetEngine(mobility=...)")
         return NearestEdgeRouter(mobility)
-    if name in ("joint", "coop", "joint-coop"):
-        assert stepper is not None and topo is not None, \
-            "joint routing needs a stepper and the fleet topology"
-        assert not getattr(stepper, "dynamic", False), \
-            "joint routing is static-environment only (dynamic=False)"
-        return JointRouter(JointPlanner(stepper, topo, max_coop=max_coop,
-                                        prefill_div=prefill_div))
-    raise ValueError(f"unknown router: {name!r}")
+    # joint
+    if stepper is None or topo is None:
+        raise ValueError("joint routing needs a stepper and the fleet "
+                         "topology (FleetEngine passes both when given "
+                         "the name)")
+    if getattr(stepper, "dynamic", False):
+        raise ValueError(
+            "joint routing is static-environment only: the plan cache it "
+            "fans out over assumes dynamic=False")
+    return JointRouter(JointPlanner(stepper, topo, max_coop=max_coop,
+                                    prefill_div=prefill_div))

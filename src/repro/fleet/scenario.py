@@ -1,21 +1,26 @@
-"""Canonical fleet scenario: a smoke-scale LM graph with paper-anchored
-tier speeds.
+"""Deprecated tuple-returning scenario helpers (use ``repro.sim``).
 
-The roofline predictors are rescaled so one device-only decode step costs
-``device_step_s`` and one edge step ``edge_step_s`` (Fig. 2 asymmetry at
-per-token granularity), and the input payload is set to a multimodal-style
-prompt (image features shipped from the device) so the partition decision
-genuinely trades bandwidth against tier compute: low-bandwidth devices plan
-device-only, well-connected ones offload.  Used by ``benchmarks/
-fleet_scale.py``, ``examples/serve_fleet.py``, and ``tests/test_fleet.py``.
+These were the canonical fleet-experiment entry points before the
+declarative scenario API (docs/api.md): ``smoke_lm_scenario`` returned a
+3- or 5-tuple depending on ``with_model``, ``smoke_mobility_scenario`` a
+6-tuple — exactly the flag-dependent arity ``repro.sim.Scenario`` replaces
+with named fields.  Both remain as thin shims over the spec builders so
+external callers keep working: they reproduce the legacy tuples bit-for-bit
+and emit a ``DeprecationWarning`` (pinned in tests/test_sim.py).
+
+Migration (see docs/api.md for the full table)::
+
+    cfg, graph, planner = smoke_lm_scenario()          # before
+    sc = build_stack(PlannerSpec())                    # after: named fields
+    sc.cfg, sc.graph, sc.planner
+
+    _, g, p, topo, mob, ctrl = smoke_mobility_scenario(40, 4, ...)  # before
+    sc = Simulation(get_scenario("smoke-mobility")).build()         # after
+    sc.graph, sc.planner, sc.topo, sc.mobility, sc.handover, sc.engine
 """
 from __future__ import annotations
 
-from typing import Tuple
-
-from repro.configs import get_smoke_config
-from repro.core import EdgentPlanner, lm_graph
-from repro.core.latency_model import RooflineLatencyModel, ScaledLatencyModel
+import warnings
 
 
 def smoke_lm_scenario(arch: str = "llama3.2-1b", *,
@@ -24,26 +29,26 @@ def smoke_lm_scenario(arch: str = "llama3.2-1b", *,
                       device_step_s: float = 0.06,
                       edge_step_s: float = 0.004,
                       with_model: bool = False):
-    """Build (cfg, graph, planner[, model, params]) for fleet experiments."""
-    cfg = get_smoke_config(arch)
-    graph = lm_graph(cfg, batch=1, seq=1)
-    graph.input_bytes = int(input_kb * 1024)
-    edge = RooflineLatencyModel(chips=8, efficiency=0.4)
-    dev = RooflineLatencyModel(chips=1, efficiency=0.4)
-    full = graph.branches[-1]
-    k_edge = edge_step_s / sum(edge.predict(l) for l in full)
-    k_dev = device_step_s / sum(dev.predict(l) for l in full)
-    planner = EdgentPlanner(graph, latency_req_s=latency_req_s)
-    planner.with_models(ScaledLatencyModel(edge, k_edge),
-                        ScaledLatencyModel(dev, k_dev))
+    """Deprecated: build ``(cfg, graph, planner[, model, params])`` as a
+    positional tuple.  Use ``repro.sim.build_stack(PlannerSpec(...))`` —
+    it returns the same objects as named ``Scenario`` fields with no
+    flag-dependent arity."""
+    warnings.warn(
+        "smoke_lm_scenario() is deprecated: use repro.sim "
+        "(build_stack(PlannerSpec(...)) for the model stack, or "
+        "Simulation(get_scenario('smoke-lm')) for a full experiment); "
+        "the tuple return will be removed", DeprecationWarning,
+        stacklevel=2)
+    from repro.sim.build import build_stack
+    from repro.sim.spec import PlannerSpec
+    sc = build_stack(
+        PlannerSpec(arch=arch, latency_req_s=latency_req_s,
+                    input_kb=input_kb, device_step_s=device_step_s,
+                    edge_step_s=edge_step_s),
+        with_model=with_model)
     if not with_model:
-        return cfg, graph, planner
-    import jax
-    import jax.numpy as jnp
-    from repro.models import Model
-    model = Model(cfg)
-    params = model.init_params(jax.random.key(0), dtype=jnp.float32)
-    return cfg, graph, planner, model, params
+        return sc.cfg, sc.graph, sc.planner
+    return sc.cfg, sc.graph, sc.planner, sc.model, sc.params
 
 
 def smoke_mobility_scenario(num_devices: int, num_edges: int = 4, *,
@@ -54,31 +59,26 @@ def smoke_mobility_scenario(num_devices: int, num_edges: int = 4, *,
                             result_kb: float = 4.0,
                             sample_dt: float = 0.5, hazard: float = 1 / 20.0,
                             **mobile_kwargs):
-    """Canonical mobility scenario: the smoke LM stack on a *mobile* fleet.
-
-    Wires the three mobility pieces together (trajectories + position->
-    bandwidth geography via :func:`~repro.fleet.mobility.make_mobile_fleet`,
-    BOCD/oracle trigger via
-    :class:`~repro.fleet.mobility.HandoverController`) around the same graph
-    and planner as :func:`smoke_lm_scenario`, so the static and mobile
-    benchmarks compare the same model.  ``policy='none'`` returns
-    ``controller=None`` — the no-handover baseline still moves (bandwidth
-    to the serving edge degrades) but never migrates.
-
-    Returns ``(cfg, graph, planner, topo, mobility, controller)``; feed the
-    last three to ``FleetEngine(mobility=..., handover=..., router='nearest')``.
-    Used by ``benchmarks/fleet_scale.py --mobility`` and the handover
-    invariant tests."""
-    from repro.fleet.mobility import HandoverController, make_mobile_fleet
-    cfg, graph, planner = smoke_lm_scenario(arch,
-                                            latency_req_s=latency_req_s)
-    # streaming per-token downlink (multimodal features back to the device):
-    # decode rounds exercise the wireless link every token, so a degrading
-    # serving link hurts *in-flight* requests — the regime handover rescues
-    graph.result_bytes = int(result_kb * 1024)
-    topo, mobility = make_mobile_fleet(num_devices, num_edges, seed=seed,
-                                       speed=speed, horizon_s=horizon_s,
-                                       **mobile_kwargs)
+    """Deprecated: build the mobile smoke stack as the positional tuple
+    ``(cfg, graph, planner, topo, mobility, controller)`` (``controller``
+    is ``None`` for ``policy='none'``).  Use a ``repro.sim`` ScenarioSpec
+    with ``TopologySpec(kind='mobile')`` + ``MobilitySpec`` instead —
+    ``Simulation(spec).build()`` returns the same objects by name, plus the
+    wired ``FleetEngine``."""
+    warnings.warn(
+        "smoke_mobility_scenario() is deprecated: use repro.sim "
+        "(Simulation(get_scenario('smoke-mobility')), or a ScenarioSpec "
+        "with TopologySpec(kind='mobile') + MobilitySpec); the tuple "
+        "return will be removed", DeprecationWarning, stacklevel=2)
+    from repro.fleet.mobility import HandoverController
+    from repro.sim.build import build_stack, build_topology
+    from repro.sim.spec import PlannerSpec, TopologySpec
+    sc = build_stack(PlannerSpec(arch=arch, latency_req_s=latency_req_s,
+                                 result_kb=result_kb))
+    topo, mobility = build_topology(
+        TopologySpec(kind="mobile", num_devices=num_devices,
+                     num_edges=num_edges, speed=speed, horizon_s=horizon_s,
+                     **mobile_kwargs), seed)
     controller = None if policy == "none" else HandoverController(
         mobility, policy=policy, sample_dt=sample_dt, hazard=hazard)
-    return cfg, graph, planner, topo, mobility, controller
+    return sc.cfg, sc.graph, sc.planner, topo, mobility, controller

@@ -1,0 +1,5 @@
+import sys
+
+from repro.sim.cli import main
+
+sys.exit(main())

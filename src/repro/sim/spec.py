@@ -1,0 +1,294 @@
+"""Declarative scenario specs: the plain-data half of ``repro.sim``.
+
+A :class:`ScenarioSpec` is a small tree of dataclasses — topology, workload,
+planner, router, engine, and (optionally) mobility — that fully determines
+one fleet simulation.  Specs are plain data: they hold numbers, strings, and
+tenant tuples, never live objects, so they round-trip through
+``to_dict()`` / ``from_dict()`` / JSON (``to_json()`` / ``from_json()``) and
+a parameter sweep is just a spec edit (``dataclasses.replace`` or the CLI's
+``--set key=value``).  Building live objects from a spec is ``repro.sim
+.build``'s job; named presets live in ``repro.sim.registry``.
+
+Seeding is centralized: every stochastic input derives from the single
+``ScenarioSpec.seed`` through :meth:`ScenarioSpec.seeds` (topology/
+trajectory sampling uses ``seed``, the arrival process ``seed + 1``),
+replacing the ad-hoc ``seed`` / ``seed+1`` / hardcoded-constant drift the
+old hand-wired call sites had.  Same spec, same metrics — bit-identical
+(asserted by tests/test_sim.py and the invariant suite).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.fleet.mobility import HandoverController
+from repro.fleet.router import ROUTER_ALIASES
+from repro.fleet.workload import DEFAULT_TENANTS, TenantClass
+
+__all__ = [
+    "DerivedSeeds", "EngineSpec", "MobilitySpec", "PlannerSpec",
+    "RouterSpec", "ScenarioSpec", "TopologySpec", "WorkloadSpec",
+    "apply_overrides",
+]
+
+
+@dataclass(frozen=True)
+class DerivedSeeds:
+    """Per-subsystem seeds derived from one root seed (`ScenarioSpec.seeds`).
+
+    ``topology`` drives every sample taken at fleet-construction time:
+    bandwidth traces, device slowdowns, and — for mobile fleets —
+    trajectories and the bandwidth-noise grid.  ``workload`` drives the
+    arrival process, tenant draws, and prompt tokens."""
+    topology: int
+    workload: int
+
+
+def _check_fields(cls, d: Dict):
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} field(s) {sorted(unknown)}: "
+            f"expected a subset of {sorted(names)}")
+
+
+def _jsonify(x):
+    """Tuples -> lists, recursively: ``to_dict`` output is JSON-canonical,
+    so ``spec.to_dict() == json.loads(json.dumps(spec.to_dict()))`` and
+    dict/JSON round-trips compare equal (``__post_init__`` re-tuples on the
+    way back in)."""
+    if isinstance(x, (list, tuple)):
+        return [_jsonify(v) for v in x]
+    if isinstance(x, dict):
+        return {k: _jsonify(v) for k, v in x.items()}
+    return x
+
+
+class _Spec:
+    """Shared plain-data behavior: dict round-trip with strict field
+    checking.  Subclasses override the hooks for non-scalar fields."""
+
+    def to_dict(self) -> Dict:
+        return _jsonify(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "_Spec":
+        _check_fields(cls, d)
+        return cls(**d)
+
+
+@dataclass
+class TopologySpec(_Spec):
+    """Where requests run: N devices x M edges, static traces or a mobile
+    geography.  ``kind='static'`` builds via ``fleet.cluster.make_fleet``
+    (the trace/``*_mbps`` fields apply); ``kind='mobile'`` via
+    ``fleet.mobility.make_mobile_fleet`` (the speed/area/path-loss fields
+    apply).  Field defaults mirror those builders exactly."""
+    kind: str = "static"                 # "static" | "mobile"
+    num_devices: int = 40
+    num_edges: int = 4
+    edge_capacity: int = 8
+    hetero_edges: bool = True
+    max_edge_slowdown: float = 3.0
+    device_slowdown_range: Tuple[float, float] = (0.8, 2.5)
+    edge_bw_mbps: float = 400.0          # edge<->edge backbone
+    # --- static fleets (kind="static") ---
+    trace: str = "oboe"                  # "oboe" | "lte"
+    lo_mbps: float = 0.3
+    hi_mbps: float = 6.0
+    trace_len: int = 600
+    # --- mobile fleets (kind="mobile") ---
+    speed: float = 0.1                   # area units / s (jittered per device)
+    horizon_s: float = 60.0              # trajectory + noise-grid horizon
+    area: float = 1.0
+    peak_mbps: float = 6.0
+    floor_mbps: float = 0.05
+    d_ref: float = 0.25
+    path_exp: float = 3.0
+    noise_sigma: float = 0.1
+    noise_dt: float = 0.5
+
+    def __post_init__(self):
+        if self.kind not in ("static", "mobile"):
+            raise ValueError(f"unknown topology kind {self.kind!r}: "
+                             "expected 'static' or 'mobile'")
+        self.device_slowdown_range = tuple(self.device_slowdown_range)
+
+
+@dataclass
+class WorkloadSpec(_Spec):
+    """The request stream: arrival process, device skew, tenant mix.
+    Exactly one of ``rate_hz`` (fleet-wide) or ``rate_per_device_hz``
+    (scales with ``TopologySpec.num_devices``) must be set."""
+    rate_hz: Optional[float] = None
+    rate_per_device_hz: Optional[float] = None
+    horizon_s: float = 30.0
+    arrival: str = "poisson"             # "poisson" | "diurnal"
+    device_skew: float = 0.0
+    peak_factor: float = 4.0             # diurnal peak/base ratio
+    period_s: Optional[float] = None     # diurnal period (None = horizon)
+    prompt_len: int = 8
+    tenants: Tuple[TenantClass, ...] = DEFAULT_TENANTS
+    sample_prompts: bool = False         # draw real token prompts (needs the
+    #                                      model config's vocab; implied by
+    #                                      EngineSpec.real_decode)
+
+    def __post_init__(self):
+        self.tenants = tuple(
+            TenantClass(**t) if isinstance(t, dict) else t
+            for t in self.tenants)
+
+    def resolve_rate_hz(self, num_devices: int) -> float:
+        if (self.rate_hz is None) == (self.rate_per_device_hz is None):
+            raise ValueError(
+                "WorkloadSpec needs exactly one of rate_hz / "
+                f"rate_per_device_hz, got rate_hz={self.rate_hz!r} "
+                f"rate_per_device_hz={self.rate_per_device_hz!r}")
+        if self.rate_hz is not None:
+            return self.rate_hz
+        return self.rate_per_device_hz * num_devices
+
+
+@dataclass
+class MobilitySpec(_Spec):
+    """When in-flight work re-plans as devices move: the handover policy and
+    its trigger parameters (``fleet.mobility.HandoverController``).
+    Requires ``TopologySpec(kind='mobile')``; ``policy='none'`` keeps the
+    mobile fleet but never migrates (the baseline in the benchmarks)."""
+    policy: str = "none"                 # "none" | "oracle" | "bocd"
+    sample_dt: float = 0.5               # bandwidth sampling grid (virtual s)
+    hazard: float = 1 / 20.0             # BOCD change-point hazard
+    hysteresis: float = 0.05             # oracle nearer-edge margin
+    min_gap_s: float = 1.0               # per-device refire rate limit
+
+    def __post_init__(self):
+        if self.policy not in HandoverController.POLICIES:
+            raise ValueError(
+                f"unknown handover policy {self.policy!r}: expected one of "
+                f"{', '.join(HandoverController.POLICIES)}")
+
+
+@dataclass
+class PlannerSpec(_Spec):
+    """The model stack the Edgent planner optimizes over: a smoke-scale LM
+    graph with roofline predictors rescaled so one device-only decode step
+    costs ``device_step_s`` and one edge step ``edge_step_s`` (the paper's
+    Fig. 2 tier asymmetry at per-token granularity).  ``input_kb`` is the
+    offloaded prompt payload (multimodal-style image features);
+    ``result_kb``, when set, adds a per-token downlink so streaming
+    requests stay bandwidth-bound for their whole decode (the mobility
+    scenarios rely on this)."""
+    arch: str = "llama3.2-1b"
+    latency_req_s: float = 0.5
+    input_kb: float = 24.0
+    device_step_s: float = 0.06
+    edge_step_s: float = 0.004
+    result_kb: Optional[float] = None
+
+
+@dataclass
+class RouterSpec(_Spec):
+    """Which edge (or edge set) serves each arrival: a name from the
+    ``fleet.router.make_router`` registry plus the joint-planner fan-out
+    bound (``max_coop``, only consulted by ``router='joint'``)."""
+    name: str = "round-robin"
+    max_coop: int = 3
+
+    def __post_init__(self):
+        if self.name not in ROUTER_ALIASES:
+            raise ValueError(
+                f"unknown router {self.name!r}: expected one of "
+                f"{sorted(ROUTER_ALIASES)}")
+
+
+@dataclass
+class EngineSpec(_Spec):
+    """FleetEngine knobs: timing-only simulation by default;
+    ``real_decode=True`` also runs the actual model (B=1 caches, jitted
+    per-exit variants) — ``dtype`` then names the cache dtype (e.g.
+    ``'float32'``, ``'bfloat16'``)."""
+    real_decode: bool = False
+    dtype: Optional[str] = None
+    dynamic: bool = False
+    demote_on_deadline: bool = True
+    prefill_div: int = 8
+    replan_max_coop: int = 1
+
+
+@dataclass
+class ScenarioSpec(_Spec):
+    """One complete, serializable experiment: every knob of a fleet
+    simulation in plain data.  ``Simulation(spec).run()`` executes it;
+    ``spec.to_json()`` / ``ScenarioSpec.from_json()`` round-trip it
+    losslessly (bit-identical metrics — tests/test_sim.py)."""
+    name: str = "custom"
+    description: str = ""
+    seed: int = 0
+    planner: PlannerSpec = field(default_factory=PlannerSpec)
+    topology: TopologySpec = field(default_factory=TopologySpec)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    router: RouterSpec = field(default_factory=RouterSpec)
+    engine: EngineSpec = field(default_factory=EngineSpec)
+    mobility: Optional[MobilitySpec] = None
+
+    _NESTED = {"planner": PlannerSpec, "topology": TopologySpec,
+               "workload": WorkloadSpec, "router": RouterSpec,
+               "engine": EngineSpec, "mobility": MobilitySpec}
+
+    def seeds(self) -> DerivedSeeds:
+        """The one place per-subsystem seeds come from (see module
+        docstring): fleet sampling at ``seed``, arrivals at ``seed + 1``."""
+        return DerivedSeeds(topology=self.seed, workload=self.seed + 1)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ScenarioSpec":
+        _check_fields(cls, d)
+        kw = dict(d)
+        for key, sub_cls in cls._NESTED.items():
+            if isinstance(kw.get(key), dict):
+                kw[key] = sub_cls.from_dict(kw[key])
+        return cls(**kw)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ScenarioSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# `_NESTED` must not look like a dataclass field (no annotation above) —
+# assert that so a future edit cannot silently turn it into one.
+assert "_NESTED" not in {f.name for f in dataclasses.fields(ScenarioSpec)}
+
+
+def apply_overrides(spec: ScenarioSpec,
+                    assignments: Dict[str, object]) -> ScenarioSpec:
+    """Return a new spec with dotted-path overrides applied, e.g.
+    ``{"topology.num_devices": 100, "router.name": "joint"}`` — the engine
+    behind the CLI's ``--set``.  Overriding into ``mobility`` when it is
+    unset materializes a default :class:`MobilitySpec` first.  Unknown
+    paths raise ``ValueError`` (the same strict check as ``from_dict``)."""
+    d = spec.to_dict()
+    for path, value in assignments.items():
+        parts = path.split(".")
+        cur = d
+        for i, p in enumerate(parts[:-1]):
+            if p not in cur:
+                raise ValueError(f"unknown spec path {path!r} "
+                                 f"(no field {p!r})")
+            if cur[p] is None and p == "mobility":
+                cur[p] = MobilitySpec().to_dict()
+            if not isinstance(cur[p], dict):
+                raise ValueError(f"spec path {path!r} descends into "
+                                 f"non-spec field {p!r}")
+            cur = cur[p]
+        leaf = parts[-1]
+        if leaf not in cur:
+            raise ValueError(f"unknown spec path {path!r} "
+                             f"(no field {leaf!r})")
+        cur[leaf] = value
+    return ScenarioSpec.from_dict(d)

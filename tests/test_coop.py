@@ -11,17 +11,17 @@ from repro.core.latency_model import RooflineLatencyModel
 from repro.core.partitioner import (branch_latency, multi_branch_latency,
                                     optimize_multi, optimize_with_fallback,
                                     proportional_cuts)
-from repro.fleet import (FleetEngine, JointPlanner, make_fleet, make_workload,
-                         smoke_lm_scenario)
+from repro.fleet import FleetEngine, JointPlanner, make_fleet, make_workload
 from repro.fleet.coop import assign_spans, hop_schedule, span_seconds
 from repro.fleet.router import BandwidthAwareRouter
 from repro.fleet.workload import FleetRequest
+from repro.sim import PlannerSpec, build_stack
 
 
 @functools.lru_cache(maxsize=1)
 def _scenario():
-    _, graph, planner = smoke_lm_scenario()
-    return graph, planner
+    sc = build_stack(PlannerSpec())
+    return sc.graph, sc.planner
 
 
 # --------------------------------------------------------------------------

@@ -1,11 +1,13 @@
 """Fleet simulator: event-loop determinism, router policy ordering, monotone
-load response, device-local bypass — plus pick_exit edge cases."""
+load response, device-local bypass — plus pick_exit edge cases.  All
+scenarios are wired through the declarative ``repro.sim`` specs."""
 import numpy as np
 import pytest
 
-from repro.fleet import (EventQueue, FleetEngine, make_fleet, make_workload,
-                         smoke_lm_scenario)
+from repro.fleet import EventQueue
 from repro.serving.scheduler import pick_exit
+from repro.sim import (RouterSpec, ScenarioSpec, Simulation, TopologySpec,
+                       WorkloadSpec)
 
 
 def test_event_queue_orders_by_time_then_fifo():
@@ -29,56 +31,49 @@ def test_pick_exit_preferred_fits_stays_preferred():
     assert pick_exit(10.0, per_exit, tokens_left=5, preferred=2) == 2
 
 
-@pytest.fixture(scope="module")
-def scenario():
-    _, graph, planner = smoke_lm_scenario()
-    return graph, planner
+def _spec(router, *, seed=2, nd=60, rate=80.0, horizon=20.0):
+    return ScenarioSpec(
+        name="fleet-test", seed=seed,
+        topology=TopologySpec(num_devices=nd, num_edges=4, edge_capacity=8,
+                              lo_mbps=0.1, hi_mbps=6.0,
+                              max_edge_slowdown=4.0),
+        workload=WorkloadSpec(rate_hz=rate, horizon_s=horizon,
+                              arrival="diurnal", device_skew=1.0),
+        router=RouterSpec(name=router))
 
 
-def _run(graph, planner, router, *, seed=2, nd=60, rate=80.0, horizon=20.0,
-         workload=None):
-    topo = make_fleet(nd, 4, seed=seed, edge_capacity=8, lo_mbps=0.1,
-                      hi_mbps=6.0, max_edge_slowdown=4.0)
-    wl = workload if workload is not None else make_workload(
-        nd, rate_hz=rate, horizon_s=horizon, seed=seed + 1,
-        arrival="diurnal", device_skew=1.0)
-    return FleetEngine(topo, graph, planner, router=router).run(wl)
+def _run(router, **kw):
+    return Simulation(_spec(router, **kw)).run()
 
 
-def test_fleet_determinism_same_seed(scenario):
-    graph, planner = scenario
-    a = _run(graph, planner, "jsq").summary()
-    b = _run(graph, planner, "jsq").summary()
+def test_fleet_determinism_same_seed():
+    a = _run("jsq").summary()
+    b = _run("jsq").summary()
     assert a == b                      # bit-identical virtual-time metrics
     assert a["requests"] > 100
 
 
-def test_jsq_beats_round_robin_under_skewed_load(scenario):
-    graph, planner = scenario
-    rr = _run(graph, planner, "round-robin").summary()["slo_attainment"]
-    jsq = _run(graph, planner, "jsq").summary()["slo_attainment"]
+def test_jsq_beats_round_robin_under_skewed_load():
+    rr = _run("round-robin").summary()["slo_attainment"]
+    jsq = _run("jsq").summary()["slo_attainment"]
     assert jsq > rr
 
 
-def test_slo_attainment_degrades_monotonically_with_rate(scenario):
-    graph, planner = scenario
-    nd = 60
-    # nested workloads (subsampled from one draw) isolate the load effect
-    # from arrival-sampling noise
-    full = make_workload(nd, rate_hz=640.0, horizon_s=20.0, seed=3,
-                         arrival="diurnal", device_skew=1.0)
+def test_slo_attainment_degrades_monotonically_with_rate():
+    # nested workloads (subsampled from one spec-built draw) isolate the
+    # load effect from arrival-sampling noise: build once at the top rate,
+    # then re-run the same engine over strided subsets
+    sc = Simulation(_spec("jsq", rate=640.0)).build()
     attains = []
     for stride in (16, 4, 1):          # rate 40 -> 160 -> 640
-        wl = full[::stride]
-        attains.append(
-            _run(graph, planner, "jsq", workload=wl).summary()["slo_attainment"])
+        wl = sc.workload[::stride]
+        attains.append(sc.engine.run(wl).summary()["slo_attainment"])
     assert attains[0] >= attains[1] >= attains[2]
     assert attains[0] > attains[2]     # the effect is real, not flat
 
 
-def test_device_only_plans_bypass_edges(scenario):
-    graph, planner = scenario
-    m = _run(graph, planner, "jsq")
+def test_device_only_plans_bypass_edges():
+    m = _run("jsq")
     local = [r for r in m.records if r.edge == -1]
     offloaded = [r for r in m.records if r.edge >= 0]
     assert local and offloaded         # mixed-bandwidth fleet splits both ways
@@ -92,11 +87,12 @@ def test_device_only_plans_bypass_edges(scenario):
     assert all(r.queue_delay_s == 0.0 for r in first_local.values())
 
 
-def test_shared_plan_cache_is_populated(scenario):
-    graph, planner = scenario
-    topo = make_fleet(30, 2, seed=0)
-    wl = make_workload(30, rate_hz=30.0, horizon_s=10.0, seed=1)
-    eng = FleetEngine(topo, graph, planner, router="bandwidth-aware")
-    eng.run(wl)
+def test_shared_plan_cache_is_populated():
+    sc = Simulation(ScenarioSpec(
+        name="plan-cache", seed=0,
+        topology=TopologySpec(num_devices=30, num_edges=2),
+        workload=WorkloadSpec(rate_hz=30.0, horizon_s=10.0),
+        router=RouterSpec(name="bandwidth-aware"))).build()
+    sc.engine.run(sc.workload)
     # many devices, few quantized bandwidth states -> far fewer searches
-    assert 0 < len(eng.stepper.plan_cache) < len(wl)
+    assert 0 < len(sc.engine.stepper.plan_cache) < len(sc.workload)

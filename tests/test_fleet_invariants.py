@@ -9,20 +9,22 @@ against the handover policies:
   drain to zero,
 * metrics conserve the request count, and migrated handover bytes are
   non-negative and conserved against the backbone transfer events,
+* simulations rebuilt from the same ``repro.sim`` spec (including fresh
+  ``Simulation`` objects) are deterministic,
 * BOCD replan timing is deterministic (golden-pinned).
 
-With hypothesis installed (CI) the properties are fuzzed over fleet shapes
-and workloads; without it the deterministic seed matrix below still covers
-all routers and policies.
+Every scenario is declared as a ``repro.sim`` ScenarioSpec — seeds derive
+from the one root seed via ``ScenarioSpec.seeds()``.  With hypothesis
+installed (CI) the properties are fuzzed over fleet shapes and workloads;
+without it the deterministic seed matrix below still covers all routers and
+policies.
 """
-import functools
-
 import pytest
 
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
-from repro.fleet import FleetEngine, make_fleet, make_workload, \
-    smoke_lm_scenario, smoke_mobility_scenario
 from repro.fleet.workload import TenantClass
+from repro.sim import (MobilitySpec, PlannerSpec, RouterSpec, ScenarioSpec,
+                       Simulation, TopologySpec, WorkloadSpec)
 
 ROUTERS = ("round-robin", "jsq", "bandwidth-aware", "joint")
 HANDOVER_POLICIES = ("oracle", "bocd")
@@ -34,10 +36,30 @@ STREAM_TENANTS = (
 )
 
 
-@functools.lru_cache(maxsize=1)
-def _scenario():
-    _, graph, planner = smoke_lm_scenario()
-    return graph, planner
+def _static_spec(router, *, nd, ne, rate, seed, horizon=8.0,
+                 device_skew=1.0):
+    return ScenarioSpec(
+        name="invariants", seed=seed,
+        topology=TopologySpec(num_devices=nd, num_edges=ne, edge_capacity=4,
+                              lo_mbps=0.1, hi_mbps=6.0,
+                              max_edge_slowdown=4.0),
+        workload=WorkloadSpec(rate_hz=rate, horizon_s=horizon,
+                              device_skew=device_skew),
+        router=RouterSpec(name=router))
+
+
+def _mobility_spec(policy, *, nd=10, ne=4, rate=6.0, speed=0.5, seed=0,
+                   horizon=10.0):
+    return ScenarioSpec(
+        name="mobility-invariants", seed=seed,
+        planner=PlannerSpec(result_kb=4.0),
+        topology=TopologySpec(kind="mobile", num_devices=nd, num_edges=ne,
+                              speed=speed, horizon_s=horizon + 30.0,
+                              floor_mbps=0.1, noise_sigma=0.08),
+        workload=WorkloadSpec(rate_hz=rate, horizon_s=horizon,
+                              device_skew=0.5, tenants=STREAM_TENANTS),
+        router=RouterSpec(name="nearest"),
+        mobility=MobilitySpec(policy=policy))
 
 
 class _MonotoneQueue:
@@ -78,22 +100,26 @@ class _MonotoneQueue:
         return bool(self._inner)
 
 
-def _run_checked(router, *, nd, ne, rate, seed, horizon=8.0,
-                 monkeypatch=None):
-    graph, planner = _scenario()
-    topo = make_fleet(nd, ne, seed=seed, edge_capacity=4,
-                      lo_mbps=0.1, hi_mbps=6.0, max_edge_slowdown=4.0)
-    wl = make_workload(nd, rate_hz=rate, horizon_s=horizon, seed=seed + 1,
-                       arrival="poisson", device_skew=1.0)
-    eng = FleetEngine(topo, graph, planner, router=router)
+def _run_spec_monotone(spec):
+    """Build the spec and run it with the monotone-clock/backlog proxy
+    patched over the engine's event queue."""
+    sc = Simulation(spec).build()
 
     import repro.fleet.engine as fe
     orig = fe.EventQueue
-    fe.EventQueue = lambda: _MonotoneQueue(orig(), topo)
+    fe.EventQueue = lambda: _MonotoneQueue(orig(), sc.topo)
     try:
-        metrics = eng.run(wl)
+        metrics = sc.engine.run(sc.workload)
     finally:
         fe.EventQueue = orig
+    return sc, metrics
+
+
+def _run_checked(router, *, nd, ne, rate, seed, horizon=8.0):
+    sc, metrics = _run_spec_monotone(
+        _static_spec(router, nd=nd, ne=ne, rate=rate, seed=seed,
+                     horizon=horizon))
+    topo, wl = sc.topo, sc.workload
 
     # ---- completion exactly once + request-count conservation
     rids = sorted(r.rid for r in metrics.records)
@@ -123,22 +149,10 @@ def _run_mobility_checked(policy, *, nd=10, ne=4, rate=6.0, speed=0.5,
     random-waypoint motion, the given handover policy — same monotone-clock
     and backlog proxies, same exactly-once / drain assertions, plus the
     handover-specific conservation checks."""
-    _, graph, planner, topo, mob, ctrl = smoke_mobility_scenario(
-        nd, ne, seed=seed, speed=speed, policy=policy,
-        horizon_s=horizon + 30.0, floor_mbps=0.1, noise_sigma=0.08)
-    wl = make_workload(nd, rate_hz=rate, horizon_s=horizon, seed=seed + 1,
-                       arrival="poisson", device_skew=0.5,
-                       tenants=STREAM_TENANTS)
-    eng = FleetEngine(topo, graph, planner, router="nearest",
-                      mobility=mob, handover=ctrl)
-
-    import repro.fleet.engine as fe
-    orig = fe.EventQueue
-    fe.EventQueue = lambda: _MonotoneQueue(orig(), topo)
-    try:
-        metrics = eng.run(wl)
-    finally:
-        fe.EventQueue = orig
+    sc, metrics = _run_spec_monotone(
+        _mobility_spec(policy, nd=nd, ne=ne, rate=rate, speed=speed,
+                       seed=seed, horizon=horizon))
+    topo, wl = sc.topo, sc.workload
 
     # ---- completion exactly once + request-count conservation: a migrated
     # request must neither drop nor complete at both its edges
@@ -208,13 +222,30 @@ def test_mobility_rerun_determinism(policy):
     """Stateful handover machinery (BOCD posteriors, attachments, sampling
     grid) must reset between runs: same engine, same workload => identical
     summaries."""
-    _, graph, planner, topo, mob, ctrl = smoke_mobility_scenario(
-        8, 3, seed=11, speed=0.4, policy=policy, horizon_s=40.0)
-    wl = make_workload(8, rate_hz=6.0, horizon_s=8.0, seed=12,
-                       tenants=STREAM_TENANTS)
-    eng = FleetEngine(topo, graph, planner, router="nearest",
-                      mobility=mob, handover=ctrl)
-    assert eng.run(wl).summary() == eng.run(wl).summary()
+    sc = Simulation(ScenarioSpec(
+        name="rerun", seed=11,
+        planner=PlannerSpec(result_kb=4.0),
+        topology=TopologySpec(kind="mobile", num_devices=8, num_edges=3,
+                              speed=0.4, horizon_s=40.0),
+        workload=WorkloadSpec(rate_hz=6.0, horizon_s=8.0,
+                              tenants=STREAM_TENANTS),
+        router=RouterSpec(name="nearest"),
+        mobility=MobilitySpec(policy=policy))).build()
+    a = sc.engine.run(sc.workload).summary()
+    b = sc.engine.run(sc.workload).summary()
+    assert a == b
+
+
+@pytest.mark.parametrize("spec", [
+    _static_spec("jsq", nd=10, ne=3, rate=12.0, seed=4),
+    _mobility_spec("bocd", nd=8, ne=3, rate=5.0, seed=9, horizon=6.0),
+], ids=["static", "mobility"])
+def test_sim_rebuild_determinism(spec):
+    """Seed centralization contract (`ScenarioSpec.seeds()`): two
+    *independently built* Simulations of the same spec — fresh topology,
+    trajectories, workload, engine — produce bit-identical summaries."""
+    assert Simulation(spec).run().summary() == \
+        Simulation(spec).run().summary()
 
 
 @pytest.mark.parametrize("router", ROUTERS)
@@ -227,22 +258,25 @@ def test_round_robin_is_deterministic_across_runs():
     """RoundRobinRouter used to carry its cycle position across
     ``FleetEngine.run`` calls, so back-to-back simulations of the same
     workload diverged.  Same scenario twice => identical FleetMetrics."""
-    graph, planner = _scenario()
-    topo = make_fleet(10, 3, seed=1)
-    wl = make_workload(10, rate_hz=12.0, horizon_s=6.0, seed=2)
-    eng = FleetEngine(topo, graph, planner, router="round-robin")
-    a = eng.run(wl).summary()
-    b = eng.run(wl).summary()
+    sc = Simulation(ScenarioSpec(
+        name="rr-rerun", seed=1,
+        topology=TopologySpec(num_devices=10, num_edges=3),
+        workload=WorkloadSpec(rate_hz=12.0, horizon_s=6.0),
+        router=RouterSpec(name="round-robin"))).build()
+    a = sc.engine.run(sc.workload).summary()
+    b = sc.engine.run(sc.workload).summary()
     assert a == b
 
 
 @pytest.mark.parametrize("router", ROUTERS)
 def test_rerun_determinism_all_routers(router):
-    graph, planner = _scenario()
-    topo = make_fleet(8, 2, seed=5)
-    wl = make_workload(8, rate_hz=10.0, horizon_s=6.0, seed=6)
-    eng = FleetEngine(topo, graph, planner, router=router)
-    assert eng.run(wl).summary() == eng.run(wl).summary()
+    sc = Simulation(ScenarioSpec(
+        name="rerun-router", seed=5,
+        topology=TopologySpec(num_devices=8, num_edges=2),
+        workload=WorkloadSpec(rate_hz=10.0, horizon_s=6.0),
+        router=RouterSpec(name=router))).build()
+    assert sc.engine.run(sc.workload).summary() == \
+        sc.engine.run(sc.workload).summary()
 
 
 @settings(max_examples=12, deadline=None)

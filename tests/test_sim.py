@@ -1,0 +1,279 @@
+"""The declarative scenario API (`repro.sim`): spec round-trips, the
+named-scenario registry, the CLI, engine argument validation, and — the
+refactor's acceptance gate — bit-identical equivalence between
+spec-built simulations and the legacy hand-wired setups they replaced."""
+import json
+from dataclasses import replace
+
+import pytest
+
+from repro.fleet import FleetEngine, make_fleet, make_workload
+from repro.fleet.mobility import HandoverController, make_mobile_fleet
+from repro.fleet.scenario import smoke_lm_scenario, smoke_mobility_scenario
+from repro.sim import (MobilitySpec, PlannerSpec, RouterSpec, ScenarioSpec,
+                       Simulation, TopologySpec, WorkloadSpec,
+                       apply_overrides, build_stack, get_scenario,
+                       list_scenarios, register_scenario)
+from repro.sim.cli import main as sim_main
+
+BUILTINS = ("smoke-lm", "coop", "smoke-mobility")
+
+
+# ------------------------------------------------------------------ specs
+
+@pytest.mark.parametrize("name", BUILTINS)
+def test_spec_json_round_trip_is_lossless(name):
+    spec = get_scenario(name)
+    assert ScenarioSpec.from_json(spec.to_json()) == spec
+    # dict round-trip too, including tenant tuples and nested specs
+    assert ScenarioSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_seed_derivation_is_centralized():
+    """All per-subsystem seeds flow from the one root seed: topology (and
+    trajectories/noise, which sample from the same generator) at ``seed``,
+    arrivals at ``seed + 1``."""
+    seeds = ScenarioSpec(seed=5).seeds()
+    assert (seeds.topology, seeds.workload) == (5, 6)
+
+
+def test_from_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError, match="unknown ScenarioSpec field"):
+        ScenarioSpec.from_dict({"seed": 1, "typo": 2})
+    with pytest.raises(ValueError, match="unknown TopologySpec field"):
+        TopologySpec.from_dict({"num_device": 4})
+
+
+def test_spec_validation_rejects_bad_enums():
+    with pytest.raises(ValueError, match="unknown topology kind"):
+        TopologySpec(kind="orbital")
+    with pytest.raises(ValueError, match="unknown handover policy"):
+        MobilitySpec(policy="sometimes")
+    with pytest.raises(ValueError, match="unknown router"):
+        RouterSpec(name="warp")
+
+
+def test_workload_rate_must_be_exactly_one_of_two():
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkloadSpec().resolve_rate_hz(10)
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkloadSpec(rate_hz=1.0, rate_per_device_hz=1.0).resolve_rate_hz(10)
+    assert WorkloadSpec(rate_per_device_hz=0.5).resolve_rate_hz(10) == 5.0
+
+
+def test_apply_overrides_dotted_paths():
+    spec = get_scenario("smoke-lm")
+    out = apply_overrides(spec, {"topology.num_devices": 7,
+                                 "router.name": "jsq", "seed": 9})
+    assert (out.topology.num_devices, out.router.name, out.seed) == \
+        (7, "jsq", 9)
+    assert spec.topology.num_devices == 40      # input spec untouched
+    # overriding into an unset mobility materializes a default MobilitySpec
+    out = apply_overrides(spec, {"mobility.policy": "oracle"})
+    assert out.mobility.policy == "oracle"
+    with pytest.raises(ValueError, match="unknown spec path"):
+        apply_overrides(spec, {"topology.num_device": 7})
+
+
+def test_unknown_engine_dtype_is_rejected_at_build():
+    spec = apply_overrides(get_scenario("smoke-lm"),
+                           {"engine.dtype": "float23",
+                            "topology.num_devices": 2})
+    with pytest.raises(ValueError, match="unknown engine dtype"):
+        Simulation(spec).build()
+    # non-dtype jnp attribute names must not be silently accepted either
+    spec = apply_overrides(spec, {"engine.dtype": "sum"})
+    with pytest.raises(ValueError, match="unknown engine dtype"):
+        Simulation(spec).build()
+
+
+def test_mobility_policy_on_static_topology_is_rejected():
+    spec = replace(get_scenario("smoke-lm"),
+                   mobility=MobilitySpec(policy="bocd"))
+    with pytest.raises(ValueError, match="static"):
+        Simulation(spec).build()
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_lists_builtins():
+    names = [s.name for s in list_scenarios()]
+    for name in BUILTINS:
+        assert name in names
+
+
+def test_registry_unknown_name():
+    with pytest.raises(ValueError, match="unknown scenario 'nope'"):
+        get_scenario("nope")
+
+
+def test_registry_returns_fresh_specs_and_rejects_collisions():
+    a = get_scenario("smoke-lm")
+    a.topology.num_devices = 1          # caller-owned: mutate freely
+    assert get_scenario("smoke-lm").topology.num_devices == 40
+    with pytest.raises(ValueError, match="already registered"):
+        register_scenario("smoke-lm", lambda: ScenarioSpec())
+    from repro.sim import registry
+    register_scenario("test-tiny", lambda: ScenarioSpec(
+        name="test-tiny", workload=WorkloadSpec(rate_hz=1.0)))
+    try:
+        assert get_scenario("test-tiny").name == "test-tiny"
+    finally:
+        registry._REGISTRY.pop("test-tiny")    # keep the registry hermetic
+
+
+# ------------------------------------------------- engine validation (PR)
+
+def _tiny_stack():
+    return build_stack(PlannerSpec())
+
+
+def test_fleet_engine_rejects_handover_without_mobility():
+    sc = _tiny_stack()
+    topo = make_fleet(2, 1, seed=0)
+    with pytest.raises(ValueError, match="needs a mobility model"):
+        FleetEngine(topo, sc.graph, sc.planner, handover="bocd")
+
+
+def test_fleet_engine_rejects_unknown_names():
+    sc = _tiny_stack()
+    topo = make_fleet(2, 1, seed=0)
+    with pytest.raises(ValueError, match="unknown handover policy"):
+        FleetEngine(topo, sc.graph, sc.planner, handover="sometimes")
+    with pytest.raises(ValueError, match="unknown router"):
+        FleetEngine(topo, sc.graph, sc.planner, router="warp")
+    with pytest.raises(ValueError, match="nearest-edge routing needs"):
+        FleetEngine(topo, sc.graph, sc.planner, router="nearest")
+
+
+# ------------------------------------------------------ deprecated shims
+
+def test_smoke_lm_scenario_tuple_shim_warns():
+    with pytest.warns(DeprecationWarning, match="smoke_lm_scenario"):
+        out = smoke_lm_scenario()
+    assert len(out) == 3                # legacy arity preserved
+    cfg, graph, planner = out
+    assert graph.num_exits >= 1 and planner is not None
+
+
+def test_smoke_mobility_scenario_tuple_shim_warns():
+    with pytest.warns(DeprecationWarning, match="smoke_mobility_scenario"):
+        out = smoke_mobility_scenario(3, 2, seed=0, policy="none")
+    assert len(out) == 6
+    assert out[5] is None               # policy='none' -> no controller
+
+
+def test_scenario_object_replaces_tuple_arity():
+    """The named Scenario result: same objects the tuples carried, but by
+    field name, independent of flags."""
+    sc = Simulation(apply_overrides(get_scenario("smoke-lm"), {
+        "topology.num_devices": 2, "workload.horizon_s": 1.0})).build()
+    for attr in ("spec", "cfg", "graph", "planner", "topo", "workload",
+                 "engine"):
+        assert getattr(sc, attr) is not None
+    assert sc.model is None             # timing-only: no real decode stack
+    assert sc.mobility is None and sc.handover is None
+
+
+# ------------------------------------------------------------------- CLI
+
+def test_cli_list(capsys):
+    assert sim_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in BUILTINS:
+        assert name in out
+
+
+def test_cli_json_cell(capsys):
+    rc = sim_main(["--scenario", "smoke-lm", "--json",
+                   "--set", "topology.num_devices=6",
+                   "--set", "workload.horizon_s=4.0",
+                   "--set", "router.name=jsq"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["scenario"] == "smoke-lm"
+    assert payload["spec"]["topology"]["num_devices"] == 6
+    assert payload["spec"]["router"]["name"] == "jsq"
+    assert payload["metrics"]["requests"] > 0
+    assert 0.0 <= payload["metrics"]["slo_attainment"] <= 1.0
+
+
+def test_cli_spec_file_round_trip(tmp_path, capsys):
+    spec = apply_overrides(get_scenario("smoke-lm"),
+                           {"topology.num_devices": 5,
+                            "workload.horizon_s": 3.0})
+    path = tmp_path / "cell.json"
+    path.write_text(spec.to_json())
+    assert sim_main(["--spec", str(path), "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["spec"] == spec.to_dict()
+
+
+def test_cli_rejects_bad_usage():
+    with pytest.raises(ValueError, match="exactly one of"):
+        sim_main(["--json"])
+    with pytest.raises(ValueError, match="key=value"):
+        sim_main(["--scenario", "smoke-lm", "--set", "oops"])
+    with pytest.raises(ValueError, match="unknown scenario"):
+        sim_main(["--scenario", "nope"])
+
+
+# ------------------------------------- equivalence gate (legacy parity)
+
+@pytest.mark.parametrize("router",
+                         ("round-robin", "jsq", "bandwidth-aware", "joint"))
+def test_simulation_matches_legacy_static_wiring(router):
+    """`smoke-lm` across all four routers: a Simulation built from the spec
+    must reproduce the legacy hand-wired run_cell (make_fleet +
+    make_workload + FleetEngine with ad-hoc seed offsets) bit-for-bit."""
+    spec = apply_overrides(get_scenario("smoke-lm"),
+                           {"router.name": router})
+    got = Simulation(spec).run()
+
+    stack = build_stack(spec.planner)           # the pre-repro.sim wiring
+    topo = make_fleet(40, 4, seed=2, edge_capacity=8, lo_mbps=0.1,
+                      hi_mbps=6.0, max_edge_slowdown=4.0)
+    wl = make_workload(40, rate_hz=1.2 * 40, horizon_s=30.0, seed=3,
+                       arrival="diurnal", device_skew=1.0)
+    want = FleetEngine(topo, stack.graph, stack.planner, router=router).run(wl)
+
+    assert want.summary() == got.summary()
+    assert [r.rid for r in want.records] == [r.rid for r in got.records]
+
+
+@pytest.mark.parametrize("policy", ("none", "oracle", "bocd"))
+def test_simulation_matches_legacy_mobility_wiring(policy):
+    """`smoke-mobility` across all handover policies: spec-built vs the
+    legacy smoke_mobility_scenario + hand-wired engine, including the
+    handover log (migration timing) — bit-identical."""
+    spec = get_scenario("smoke-mobility")
+    spec = replace(spec, mobility=replace(spec.mobility, policy=policy))
+    got = Simulation(spec).run()
+
+    stack = build_stack(spec.planner)           # the pre-repro.sim wiring
+    topo, mobility = make_mobile_fleet(40, 4, seed=3, speed=0.25,
+                                       horizon_s=60.0, floor_mbps=0.1,
+                                       noise_sigma=0.08)
+    ctrl = None if policy == "none" else HandoverController(
+        mobility, policy=policy, sample_dt=0.5, hazard=1 / 20.0)
+    wl = make_workload(40, rate_hz=0.2 * 40, horizon_s=25.0, seed=4,
+                       device_skew=0.5,
+                       tenants=get_scenario("smoke-mobility").workload.tenants)
+    want = FleetEngine(topo, stack.graph, stack.planner, router="nearest",
+                       mobility=mobility, handover=ctrl).run(wl)
+
+    assert want.summary() == got.summary()
+    assert want.handover_log == got.handover_log
+
+
+@pytest.mark.parametrize("name", ("smoke-lm", "smoke-mobility"))
+def test_json_round_trip_rebuilds_identical_metrics(name):
+    """Serialization gate: spec -> JSON -> spec rebuilds a simulation whose
+    FleetMetrics (completed count, SLO attainment, handover log) are
+    bit-identical to the original run."""
+    spec = get_scenario(name)
+    a = Simulation(spec).run()
+    b = Simulation(ScenarioSpec.from_json(spec.to_json())).run()
+    assert len(a.records) == len(b.records)
+    assert a.summary() == b.summary()
+    assert a.handover_log == b.handover_log
