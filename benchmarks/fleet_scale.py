@@ -1,11 +1,13 @@
 """Fleet-scale serving benchmark: SLO attainment vs. fleet size and router
 policy under a skewed diurnal workload on heterogeneous edges.
 
-Each cell is one declarative ``repro.sim`` scenario (docs/api.md): the
-sweeps edit the registered ``smoke-lm`` / ``smoke-mobility`` specs
-(devices, router, speed, policy, seed) and run them through ``Simulation``.
-The same seed always reproduces identical numbers — the benchmark re-runs
-one cell to prove it.
+Every table is a ``repro.sim.sweep`` over the registered ``smoke-lm`` /
+``smoke-mobility`` specs (docs/api.md): the sweep axes edit the spec
+(devices, router, speed, policy), each cell is an independent fully-
+specified scenario, and the same seed always reproduces identical numbers —
+the benchmark re-runs one cell to prove it.  ``--jsonl`` dumps the raw
+``{spec, metrics}`` rows; ``--processes`` fans cells out over workers
+(neither changes any number).
 
 Run:  PYTHONPATH=src python benchmarks/fleet_scale.py
       PYTHONPATH=src python benchmarks/fleet_scale.py --coop
@@ -14,10 +16,9 @@ Run:  PYTHONPATH=src python benchmarks/fleet_scale.py
 from __future__ import annotations
 
 import argparse
-import time
-from dataclasses import replace
 
-from repro.sim import Simulation, get_scenario
+from repro.sim import apply_overrides, get_scenario
+from repro.sim.sweep import grid_cells, run_cell, run_sweep
 
 # single source of truth: the registered smoke specs (repro.sim.registry)
 _LM = get_scenario("smoke-lm")
@@ -40,12 +41,18 @@ MOBILITY_HORIZON_S = _MOB.workload.horizon_s
 SMOKE_DEVICES = _LM.topology.num_devices     # 40: the registered smoke cells
 
 
-def run_cell(num_devices: int, router: str, *, seed: int = SEED) -> dict:
-    base = get_scenario("smoke-lm")
-    spec = replace(base, seed=seed,
-                   topology=replace(base.topology, num_devices=num_devices),
-                   router=replace(base.router, name=router))
-    return Simulation(spec).run().summary()
+def _sweep(base, fixed, axes, args):
+    """Expand (base + fixed overrides) x axes and run the sweep; rows come
+    back in grid order (last axis fastest)."""
+    cells = grid_cells(apply_overrides(base, fixed), axes)
+    return run_sweep(cells, out_path=args.jsonl, processes=args.processes)
+
+
+def lm_cell_spec(num_devices: int, router: str, *, seed: int = SEED):
+    """One static-fleet cell: the smoke-lm spec at (devices, router)."""
+    return apply_overrides(get_scenario("smoke-lm"),
+                           {"seed": seed, "topology.num_devices": num_devices,
+                            "router.name": router})
 
 
 def run_coop(args):
@@ -57,31 +64,32 @@ def run_coop(args):
     print(f"cooperative multi-edge planning: {NUM_EDGES} edges (speed "
           f"1x..4x), diurnal arrivals @ {RATE_PER_DEVICE_HZ}/device/s, "
           f"horizon {HORIZON_S}s, seed {args.seed}")
+    rows = _sweep(get_scenario("smoke-lm"), {"seed": args.seed},
+                  {"topology.num_devices": sizes, "router.name": routers},
+                  args)
+    cell = {(r["spec"]["topology"]["num_devices"], r["spec"]["router"]["name"]):
+            r for r in rows}
     print(f"\n{'devices':>8} | " +
           " | ".join(f"{r:>16}" for r in routers) +
           " |     coop share    (SLO attainment)")
     print("-" * (16 + 19 * len(routers) + 16))
     gate = None
     for nd in sizes:
-        row = {}
-        for router in routers:
-            t0 = time.perf_counter()
-            row[router] = (run_cell(nd, router, seed=args.seed),
-                           time.perf_counter() - t0)
-        joint = row["joint"][0]
+        joint = cell[(nd, "joint")]["metrics"]
         share = joint["coop_requests"] / max(joint["requests"], 1)
         print(f"{nd:>8} | " + " | ".join(
-            f"{row[r][0]['slo_attainment']:>9.4f} {row[r][1]:5.1f}s"
+            f"{cell[(nd, r)]['metrics']['slo_attainment']:>9.4f} "
+            f"{cell[(nd, r)]['wall_s']:5.1f}s"
             for r in routers) +
             f" |   {share:>6.3f}  ({joint['requests']} requests, "
             f"{joint['backbone_mb']:.3f} MB backbone)")
         if nd == 100:
-            gate = (row["bandwidth-aware"][0]["slo_attainment"],
-                    joint["slo_attainment"])
+            gate = (cell[(nd, "bandwidth-aware")]["metrics"]
+                    ["slo_attainment"], joint["slo_attainment"])
 
     # ---- determinism: same seed -> bit-identical summary
-    a = run_cell(sizes[0], "joint", seed=args.seed)
-    b = run_cell(sizes[0], "joint", seed=args.seed)
+    a = cell[(sizes[0], "joint")]["metrics"]
+    b = run_cell(lm_cell_spec(sizes[0], "joint", seed=args.seed))["metrics"]
     assert a == b, "same seed must reproduce identical metrics"
     print("\ndeterminism check: identical summaries on re-run  [ok]")
     if gate is not None and args.seed == SEED:
@@ -92,17 +100,14 @@ def run_coop(args):
             "joint multi-edge planning must not lose to single-edge routing"
 
 
-def run_mobility_cell(nd: int, speed: float, policy: str, *,
-                      seed: int) -> dict:
-    """One deterministic mobility simulation: ``nd`` devices random-waypoint
+def mobility_cell_spec(nd: int, speed: float, policy: str, *, seed: int):
+    """One deterministic mobility cell: ``nd`` devices random-waypoint
     walking at ``speed`` over a 4-edge geography, nearest-edge routing, the
     given handover policy driving mid-request migration."""
-    base = get_scenario("smoke-mobility")
-    spec = replace(base, seed=seed + 1,
-                   topology=replace(base.topology, num_devices=nd,
-                                    speed=speed),
-                   mobility=replace(base.mobility, policy=policy))
-    return Simulation(spec).run().summary()
+    return apply_overrides(get_scenario("smoke-mobility"),
+                           {"seed": seed + 1, "topology.num_devices": nd,
+                            "topology.speed": speed,
+                            "mobility.policy": policy})
 
 
 def run_mobility(args):
@@ -116,19 +121,24 @@ def run_mobility(args):
           f"{NUM_EDGES}-edge geography, streaming tenants @ "
           f"{MOBILITY_RATE_HZ}/device/s, horizon {MOBILITY_HORIZON_S}s, "
           f"seed {args.seed}")
+    rows = _sweep(get_scenario("smoke-mobility"),
+                  {"seed": args.seed + 1, "topology.num_devices": nd},
+                  {"topology.speed": speeds,
+                   "mobility.policy": list(MOBILITY_POLICIES)},
+                  args)
+    cell = {(r["spec"]["topology"]["speed"], r["spec"]["mobility"]["policy"]):
+            r["metrics"] for r in rows}
     print(f"\n{'speed':>6} | " +
           " | ".join(f"{p:>10}" for p in MOBILITY_POLICIES) +
           " |  bocd-none |  handovers  migrated   (SLO attainment)")
     print("-" * (10 + 13 * len(MOBILITY_POLICIES) + 40))
     gaps = []
     for speed in speeds:
-        row = {policy: run_mobility_cell(nd, speed, policy, seed=args.seed)
-               for policy in MOBILITY_POLICIES}
-        bocd, none = row["bocd"], row["none"]
+        bocd, none = cell[(speed, "bocd")], cell[(speed, "none")]
         gap = bocd["slo_attainment"] - none["slo_attainment"]
         gaps.append((speed, gap, bocd, none))
         print(f"{speed:>6.2f} | " + " | ".join(
-            f"{row[p]['slo_attainment']:>10.4f}"
+            f"{cell[(speed, p)]['slo_attainment']:>10.4f}"
             for p in MOBILITY_POLICIES) +
             f" |   {gap:>+7.4f} | {bocd['handovers']:>9d}  "
             f"{bocd['migrated_mb']:>6.3f}MB  "
@@ -137,7 +147,8 @@ def run_mobility(args):
     # ---- determinism: same seed -> bit-identical summary (the sweep
     # already computed this cell once; one re-run suffices)
     a = gaps[-1][2]
-    b = run_mobility_cell(nd, speeds[-1], "bocd", seed=args.seed)
+    b = run_cell(mobility_cell_spec(nd, speeds[-1], "bocd",
+                                    seed=args.seed))["metrics"]
     assert a == b, "same seed must reproduce identical metrics"
     print("\ndeterminism check: identical summaries on re-run  [ok]")
 
@@ -172,6 +183,10 @@ def main():
                     help="handover policies vs mobility speed")
     ap.add_argument("--smoke", action="store_true",
                     help="small fleet only (CI artifact)")
+    ap.add_argument("--jsonl", metavar="FILE", default=None,
+                    help="also write the sweep rows as JSONL")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="worker processes across sweep cells")
     args = ap.parse_args()
     if args.coop:
         run_coop(args)
@@ -183,16 +198,19 @@ def main():
     print(f"fleet-scale serving: {NUM_EDGES} edges (speed 1x..4x), diurnal "
           f"arrivals @ {RATE_PER_DEVICE_HZ}/device/s, horizon {HORIZON_S}s, "
           f"seed {args.seed}")
+    rows = _sweep(get_scenario("smoke-lm"), {"seed": args.seed},
+                  {"topology.num_devices": args.sizes,
+                   "router.name": list(ROUTERS)}, args)
+    cell = {(r["spec"]["topology"]["num_devices"], r["spec"]["router"]["name"]):
+            r for r in rows}
     print(f"\n{'devices':>8} | " +
           " | ".join(f"{r:>16}" for r in ROUTERS) + " |   (SLO attainment)")
     print("-" * (12 + 19 * len(ROUTERS)))
     last, best_gap = {}, (None, -1.0)
     for nd in args.sizes:
-        row = []
-        for router in ROUTERS:
-            t0 = time.perf_counter()
-            s = run_cell(nd, router, seed=args.seed)
-            row.append((router, s, time.perf_counter() - t0))
+        row = [(router, cell[(nd, router)]["metrics"],
+                cell[(nd, router)]["wall_s"]) for router in ROUTERS]
+        for router, s, _ in row:
             last[router] = s
         rr_cell = row[0][1]["slo_attainment"]
         for router, s, _ in row[1:]:
@@ -215,8 +233,8 @@ def main():
           f"partitions: {last['bandwidth-aware']['partition_histogram']}")
 
     # ---- determinism: same seed -> bit-identical summary
-    a = run_cell(args.sizes[0], "jsq", seed=args.seed)
-    b = run_cell(args.sizes[0], "jsq", seed=args.seed)
+    a = cell[(args.sizes[0], "jsq")]["metrics"]
+    b = run_cell(lm_cell_spec(args.sizes[0], "jsq", seed=args.seed))["metrics"]
     assert a == b, "same seed must reproduce identical metrics"
     print("\ndeterminism check: identical summaries on re-run  [ok]")
 

@@ -39,6 +39,9 @@ class CoInferencePlan:
                                             if self.partition > 0 else ())
 
 
+_CUTS_MEMO: dict = {}   # (p, speeds) -> (cuts, keep); see proportional_cuts
+
+
 def branch_latency(graph: InferenceGraph, exit_idx: int, p: int,
                    f_edge, f_device, bandwidth_bps: float,
                    edge_load: float = 1.0, device_load: float = 1.0) -> float:
@@ -75,9 +78,17 @@ def proportional_cuts(p: int, speeds: Sequence[float]) -> Tuple[tuple, tuple]:
     survivors until stable, so the function is *idempotent on the kept set*
     — re-splitting ``p`` over ``speeds[keep]`` returns the same cuts.  Plan
     search, span assignment, and round timing all rely on that to agree on
-    one span layout.  ``k == 1`` always returns ``((p,), (0,))``."""
+    one span layout.  ``k == 1`` always returns ``((p,), (0,))``.
+
+    Pure function of ``(p, speeds)``, memoized: the fleet's plan search and
+    per-round span assignment ask for the same handful of splits millions
+    of times at scale."""
     if p <= 0:
         return (), ()
+    memo_key = (p, tuple(speeds))
+    hit = _CUTS_MEMO.get(memo_key)
+    if hit is not None:
+        return hit
 
     def split(spds):
         weights = [1.0 / max(s, 1e-12) for s in spds]
@@ -99,16 +110,30 @@ def proportional_cuts(p: int, speeds: Sequence[float]) -> Tuple[tuple, tuple]:
     while True:
         cuts, keep = split(spds)
         if len(keep) == len(spds):
-            return cuts, tuple(idx[i] for i in keep)
+            out = cuts, tuple(idx[i] for i in keep)
+            _CUTS_MEMO[memo_key] = out
+            return out
         idx = tuple(idx[i] for i in keep)
         spds = tuple(spds[i] for i in keep)
+
+
+def branch_preds(graph: InferenceGraph, f_edge, f_device):
+    """Per-branch per-layer predictor outputs ``(edge, device)`` — the
+    ``preds`` argument of :func:`multi_branch_latency`/:func:`optimize_multi`.
+    ``predict`` is a pure function of the layer, so replaying these floats
+    through the same accumulation order is bit-exact; callers that own a
+    stable (graph, models) triple memoize this to skip per-call predictor
+    dispatch on the fleet hot path."""
+    return ([[f_edge.predict(l) for l in b] for b in graph.branches],
+            [[f_device.predict(l) for l in b] for b in graph.branches])
 
 
 def multi_branch_latency(graph: InferenceGraph, exit_idx: int,
                          cuts: Sequence[int], edge_loads: Sequence[float],
                          f_edge, f_device, bandwidth_bps: float,
                          device_load: float = 1.0,
-                         edge_bw_bps: Optional[float] = None) -> float:
+                         edge_bw_bps: Optional[float] = None,
+                         preds=None) -> float:
     """k-cut generalization of :func:`branch_latency`.
 
     ``cuts`` are ascending; span ``i`` = layers ``[cuts[i-1], cuts[i])`` runs
@@ -121,6 +146,11 @@ def multi_branch_latency(graph: InferenceGraph, exit_idx: int,
     (asserted by tests/test_coop.py)."""
     branch = graph.branches[exit_idx - 1]
     n = len(branch)
+    if preds is None:
+        pe = [f_edge.predict(l) for l in branch]
+        pd = [f_device.predict(l) for l in branch]
+    else:
+        pe, pd = preds[0][exit_idx - 1], preds[1][exit_idx - 1]
     p = cuts[-1] if cuts else 0
     t = 0.0
     if p > 0:
@@ -129,14 +159,14 @@ def multi_branch_latency(graph: InferenceGraph, exit_idx: int,
     start = 0
     for i, (cut, load) in enumerate(zip(cuts, edge_loads)):
         for j in range(start, min(cut, n)):
-            t += f_edge.predict(branch[j]) * load
+            t += pe[j] * load
         if i < len(cuts) - 1:                              # edge -> edge hop
             assert edge_bw_bps is not None, \
                 "multi-edge plans need an edge<->edge backbone bandwidth"
             t += graph.cut_bytes(exit_idx, cut) / edge_bw_bps
         start = cut
     for j in range(p, n):
-        t += f_device.predict(branch[j]) * device_load
+        t += pd[j] * device_load
     return t
 
 
@@ -144,12 +174,14 @@ def optimize_multi(graph: InferenceGraph, f_edge, f_device,
                    bandwidth_bps: float, latency_req_s: float,
                    edge_speeds: Sequence[float], *,
                    device_load: float = 1.0,
-                   edge_bw_bps: Optional[float] = None) -> CoInferencePlan:
+                   edge_bw_bps: Optional[float] = None,
+                   preds=None) -> CoInferencePlan:
     """Algorithm 1 over the k-cut space for one *fixed ordered* edge set:
     search (exit i, total edge layers p) with spans sized proportionally to
     ``edge_speeds``; prefer the largest exit meeting the deadline, else the
     global minimum-latency plan flagged infeasible (fallback semantics of
-    :func:`optimize_with_fallback`)."""
+    :func:`optimize_with_fallback`).  ``preds`` optionally carries
+    :func:`branch_preds` output to skip per-call predictor dispatch."""
     speeds = tuple(edge_speeds)
 
     def scan(exit_idx: int) -> Tuple[int, tuple, float]:
@@ -161,7 +193,7 @@ def optimize_multi(graph: InferenceGraph, f_edge, f_device,
             lat = multi_branch_latency(graph, exit_idx, cuts, loads, f_edge,
                                        f_device, bandwidth_bps,
                                        device_load=device_load,
-                                       edge_bw_bps=edge_bw_bps)
+                                       edge_bw_bps=edge_bw_bps, preds=preds)
             if lat < best[2]:
                 best = (p, cuts, lat)
         return best

@@ -14,7 +14,8 @@ from repro.core import config_map as CM
 from repro.core.graph import InferenceGraph
 from repro.core.latency_model import (ProfileRecord, RegressionLatencyModel,
                                       ScaledLatencyModel)
-from repro.core.partitioner import CoInferencePlan, optimize_multi
+from repro.core.partitioner import (CoInferencePlan, branch_preds,
+                                    optimize_multi)
 from repro.core.profiler import (DEVICE_SLOWDOWN, profile_all_branches,
                                  profiles_to_records)
 from repro.core.runtime_optimizer import (DynamicRuntimeOptimizer,
@@ -104,4 +105,16 @@ class EdgentPlanner:
         return optimize_multi(self.graph, self.f_edge, self.f_device,
                               bandwidth_bps, self.latency_req_s, edge_speeds,
                               device_load=device_load,
-                              edge_bw_bps=edge_bw_bps)
+                              edge_bw_bps=edge_bw_bps,
+                              preds=self._branch_preds())
+
+    def _branch_preds(self):
+        """Memoized :func:`~repro.core.partitioner.branch_preds` for the
+        planner's own (graph, models) triple — the fleet's joint plan
+        search calls :meth:`plan_multi` on every cache miss."""
+        key = (id(self.f_edge), id(self.f_device))
+        if getattr(self, "_preds_key", None) != key:
+            self._preds_key = key
+            self._preds = branch_preds(self.graph, self.f_edge,
+                                       self.f_device)
+        return self._preds

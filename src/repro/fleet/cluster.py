@@ -26,9 +26,14 @@ class TraceLink:
     trace_bps: np.ndarray
     dt_s: float = 1.0
 
+    def __post_init__(self):
+        # hot path: plain-list indexing returns Python floats directly,
+        # skipping per-call ndarray scalar boxing (same float64 values)
+        self._trace = [float(v) for v in self.trace_bps]
+
     def bw_at(self, t_s: float) -> float:
-        i = min(max(int(t_s / self.dt_s), 0), len(self.trace_bps) - 1)
-        return float(self.trace_bps[i])
+        i = min(max(int(t_s / self.dt_s), 0), len(self._trace) - 1)
+        return self._trace[i]
 
 
 @dataclass
@@ -53,7 +58,10 @@ class EdgeNode:
     capacity: int = 8            # concurrent decode slots (continuous-batch width)
     speed: float = 1.0           # edge-tier compute multiplier (>=1 = slower)
     # --- runtime state (owned by FleetEngine) ---
-    queue: list = field(default_factory=list)   # EDF heap: (deadline, seq, req)
+    queue: list = field(default_factory=list)   # EDF heap: [deadline, seq, req]
+    #                              entries; req slot None = tombstoned by a
+    #                              replan (lazy deletion, see FleetEngine)
+    q_dead: int = 0              # tombstoned entries still sitting in `queue`
     active: list = field(default_factory=list)  # requests in the running batch
     round_inflight: bool = False
     busy_s: float = 0.0
@@ -69,8 +77,9 @@ class EdgeNode:
     #                              enqueue, -1 per request per round)
 
     def backlog(self) -> int:
-        """Requests currently bound to this edge (queued + in the batch)."""
-        return len(self.queue) + len(self.active)
+        """Requests currently bound to this edge (queued + in the batch);
+        tombstoned queue entries are already gone logically."""
+        return len(self.queue) - self.q_dead + len(self.active)
 
     def backlog_s(self) -> float:
         """Pending-work estimate (seconds) for latency-aware routing: tokens

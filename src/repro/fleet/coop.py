@@ -48,26 +48,46 @@ class CoopAssignment:
             start = cut
         return out
 
-    def span_fractions(self) -> List[float]:
+    def span_fractions(self) -> Tuple[float, ...]:
+        hit = _FRAC_MEMO.get(self)
+        if hit is not None:
+            return hit
         p = self.partition
         if p <= 0:
-            return [0.0] * self.k
-        out, start = [], 0
-        for cut in self.cuts:
-            out.append((cut - start) / p)
-            start = cut
-        return out
+            fr = (0.0,) * self.k
+        else:
+            out, start = [], 0
+            for cut in self.cuts:
+                out.append((cut - start) / p)
+                start = cut
+            fr = tuple(out)
+        _FRAC_MEMO[self] = fr
+        return fr
+
+
+# pure-value memos for the per-arrival/per-round hot paths: assignments and
+# their span fractions are small immutable values asked for millions of
+# times at fleet scale
+_FRAC_MEMO: dict = {}
+_ASSIGN_MEMO: dict = {}
 
 
 def assign_spans(partition: int, edges: Sequence[EdgeNode]) -> CoopAssignment:
     """Size contiguous spans over ``[0, partition)`` proportionally to each
     edge's throughput; edges whose share rounds to zero layers are dropped
-    (so the realized set can be smaller than the candidate set)."""
+    (so the realized set can be smaller than the candidate set).  Pure in
+    ``(partition, [(eid, speed)])`` — memoized."""
+    key = (partition, tuple((e.eid, e.speed) for e in edges))
+    hit = _ASSIGN_MEMO.get(key)
+    if hit is not None:
+        return hit
     speeds = tuple(e.speed for e in edges)
     cuts, keep = proportional_cuts(partition, speeds)
-    return CoopAssignment(eids=tuple(edges[i].eid for i in keep),
-                          speeds=tuple(speeds[i] for i in keep),
-                          cuts=cuts)
+    out = CoopAssignment(eids=tuple(edges[i].eid for i in keep),
+                         speeds=tuple(speeds[i] for i in keep),
+                         cuts=cuts)
+    _ASSIGN_MEMO[key] = out
+    return out
 
 
 def effective_assignment(graph: InferenceGraph, exit_point: int,

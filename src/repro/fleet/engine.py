@@ -61,12 +61,17 @@ class FleetEngine:
                  prefill_div: int = 8,
                  mobility: Optional[MobilityModel] = None,
                  handover: Union[HandoverController, str, None] = None,
-                 replan_max_coop: int = 1, max_coop: int = 3):
+                 replan_max_coop: int = 1, max_coop: int = 3,
+                 retain_records: bool = True):
         self.topo = topo
         self.model, self.params = model, params
         self.dtype = dtype
         self.demote = demote_on_deadline
         self.prefill_div = prefill_div
+        # retain_records=False keeps FleetMetrics to its running aggregates
+        # (summaries unchanged, memory ~O(edges) instead of per-request
+        # record objects) — the 10k-device setting
+        self.retain_records = retain_records
         # one stepper for the whole fleet: the plan cache and the compiled
         # decode variants are shared across every device and edge
         self.stepper = CoInferenceStepper(model, graph, planner,
@@ -102,7 +107,10 @@ class FleetEngine:
                                  max_coop=max_coop, prefill_div=prefill_div,
                                  mobility=mobility)
         self.router = router
-        self._hop_cache = {}       # (exit, assign) -> hop_schedule timeline
+        # hop/span timelines are memoized on the *stepper* (fleet-wide: all
+        # engines sharing the stepper share the entries), keyed on exit,
+        # assignment, and this topology's backbone bandwidth
+        self._hop_cache = self.stepper.hop_cache
 
     # ---------------------------------------------------------------- run
     def run(self, workload: List[FleetRequest]) -> FleetMetrics:
@@ -112,16 +120,19 @@ class FleetEngine:
         identical event schedule (bit-identical summaries).  Engines and
         workload lists are reusable — all runtime state is reset here."""
         evq = EventQueue()
-        metrics = FleetMetrics(num_edges=self.topo.num_edges)
+        metrics = FleetMetrics(num_edges=self.topo.num_edges,
+                               retain_records=self.retain_records)
         self._qseq = 0
         self._pending = len(workload)      # requests not yet completed
         self._dev_inflight = {d.did: [] for d in self.topo.devices}
+        self._qentry = {}                  # req -> its live edge-queue entry
         self.router.reset()                # stateful policies must not leak
         #                                    decisions across runs
         if self.handover is not None:
             self.handover.reset()
         for edge in self.topo.edges:       # reset runtime state for reruns
             edge.queue, edge.active = [], []
+            edge.q_dead = 0
             edge.round_inflight = False
             edge.busy_s = edge.ema_round_s = 0.0
             edge.completed = 0
@@ -140,10 +151,15 @@ class FleetEngine:
             req.coop_counted = False
             evq.push(req.arrival_s, "arrival", req)
         if self.handover is not None and self.handover.policy != "none":
-            for dev in self.topo.devices:  # bandwidth sampling grid per device
-                evq.push(self.handover.sample_dt, "sample", dev.did)
+            # one fleet-wide sampling sweep per slot: the sweep observes
+            # every device in ascending id order — the exact pop order the
+            # per-device events it batches had under the EventQueue's FIFO
+            # tie-break (see repro.fleet.events)
+            evq.push(self.handover.sample_dt, "sample", None)
+        self.events_processed = 0          # sweeps count once per device
         while evq:
             ev = evq.pop()
+            self.events_processed += 1
             if ev.kind == "arrival":
                 self._on_arrival(ev.payload, evq, metrics)
             elif ev.kind == "round":
@@ -154,7 +170,7 @@ class FleetEngine:
                 src, dst, nbytes = ev.payload
                 metrics.add_transfer(src, dst, nbytes)
             elif ev.kind == "sample":
-                self._on_sample(ev.payload, evq, metrics)
+                self._on_sample_sweep(evq, metrics)
             elif ev.kind == "handover":
                 self._on_handover(ev.payload, evq, metrics)
         return metrics
@@ -190,13 +206,44 @@ class FleetEngine:
                 self._run_local(req, device, bw, evq)
                 return
             edge = self.router.route(req, device, self.topo, evq.now)
+            if self.mobility is not None:
+                # mobility-aware pricing: the router shopped with the *best*
+                # signal (MobileLink.bw_at = nearest edge); once placement
+                # is fixed, the plan must price the link the request will
+                # actually pay — the serving edge's.  For the nearest-edge
+                # router the two bandwidths are identical and this is a
+                # no-op; for placement policies that pick another edge the
+                # old code silently kept the best-signal plan.  (The joint
+                # decision branch above still prices candidates at the best
+                # signal — ROADMAP: mobility-aware joint candidate pricing.)
+                bw_serve = self._bw(device, edge.eid, evq.now)
+                if bw_serve != bw:
+                    req.plan = self.stepper.plan(bw_serve)
+                    if req.plan.partition == 0:
+                        self._run_local(req, device, bw_serve, evq)
+                        return
         req.edge = edge.eid
-        heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
+        self._enqueue(edge, req)
         edge.tokens_owed += req.max_new_tokens
-        self._qseq += 1
         self._dev_inflight[req.device].append(req)
         if not edge.round_inflight:
             self._begin_round(edge, evq, metrics)
+
+    def _enqueue(self, edge: EdgeNode, req: FleetRequest):
+        """EDF-queue a request at an edge.  Entries are mutable lists so a
+        mid-request replan can *tombstone* them in O(1) (slot 2 set to None)
+        instead of rebuilding + re-heapifying the whole queue; admission
+        skips dead entries as they surface (lazy deletion)."""
+        entry = [req.deadline_s, self._qseq, req]
+        self._qentry[req] = entry
+        heapq.heappush(edge.queue, entry)
+        self._qseq += 1
+
+    def _dequeue(self, edge: EdgeNode, req: FleetRequest):
+        """Remove a queued request in O(1): tombstone its heap entry."""
+        entry = self._qentry.pop(req)
+        entry[2] = None
+        edge.q_dead += 1
 
     def _run_local(self, req: FleetRequest, device, bw: float,
                    evq: EventQueue):
@@ -284,7 +331,11 @@ class FleetEngine:
         # admit in EDF order up to the batch width (continuous batching:
         # this happens at every round boundary, not at batch completion)
         while edge.queue and len(edge.active) < edge.capacity:
-            _, _, req = heapq.heappop(edge.queue)
+            req = heapq.heappop(edge.queue)[2]
+            if req is None:                # tombstoned by a replan
+                edge.q_dead -= 1
+                continue
+            del self._qentry[req]
             if req.admitted_s is None:
                 req.admitted_s = now
             if req.assign is not None and not req.coop_counted:
@@ -353,7 +404,7 @@ class FleetEngine:
         their in-round completion offsets and track each secondary edge's
         span compute as cooperative busy time (the primary's full round —
         which spans the whole chain — is billed by the caller)."""
-        key = (req.exit_point, req.assign)
+        key = (req.exit_point, req.assign, self.topo.edge_bw_bps)
         hit = self._hop_cache.get(key)
         if hit is None:
             f_edge = self.stepper.planner.f_edge
@@ -403,19 +454,35 @@ class FleetEngine:
                 self.topo.edges[eid].coop_inflight += 1
             req.coop_counted = True
 
-    def _on_sample(self, did: int, evq: EventQueue, metrics: FleetMetrics):
-        """One tick of the device's bandwidth sampling grid: feed the
-        handover policy the edges currently serving this device and, when it
-        fires, re-plan the device's in-flight requests.  The grid
-        self-terminates once every request completed."""
-        serving = tuple(sorted({r.edge for r in
-                                self._dev_inflight.get(did, ())
-                                if r.edge >= 0 and not r.migrating}))
-        if self.handover.observe(did, evq.now, serving) and \
-                self.replanner is not None:
-            self._replan_device(did, evq, metrics)
+    def _on_sample_sweep(self, evq: EventQueue, metrics: FleetMetrics):
+        """One tick of the fleet-wide bandwidth sampling grid: the full
+        device-edge geometry for this slot is computed as two numpy
+        matrices (batched path-loss — bit-identical to the scalar law per
+        entry), then each device's handover policy consumes its row in
+        ascending device order and, when it fires, the device's in-flight
+        requests re-plan immediately — the same per-device sequencing the
+        old one-event-per-device grid produced.  The grid self-terminates
+        once every request completed."""
+        now = evq.now
+        # a pre-built controller can be passed without mobility= (the engine
+        # then never bills per-pair rates but the sampling grid still runs)
+        mob = self.mobility if self.mobility is not None \
+            else self.handover.mobility
+        dist = mob.distances_at(now)
+        bw = mob.bw_matrix(now)
+        servings: list = [()] * self.topo.num_devices
+        for did, reqs in self._dev_inflight.items():
+            if reqs:
+                servings[did] = tuple(sorted(
+                    {r.edge for r in reqs
+                     if r.edge >= 0 and not r.migrating}))
+        fired = self.handover.observe_sweep(now, servings, dist, bw)
+        if self.replanner is not None:
+            for did in fired:
+                self._replan_device(did, evq, metrics)
+        self.events_processed += self.topo.num_devices - 1
         if self._pending > 0:
-            evq.push(evq.now + self.handover.sample_dt, "sample", did)
+            evq.push(now + self.handover.sample_dt, "sample", None)
 
     def _replan_device(self, did: int, evq: EventQueue,
                        metrics: FleetMetrics):
@@ -472,8 +539,7 @@ class FleetEngine:
             if dec is not None:
                 self._apply_decision(req, dec, acquire=False)
             return
-        edge.queue = [e for e in edge.queue if e[2] is not req]
-        heapq.heapify(edge.queue)
+        self._dequeue(edge, req)
         edge.tokens_owed -= req.max_new_tokens - req.tokens_done
         if dec.local:
             self._apply_decision(req, dec, acquire=False)
@@ -509,8 +575,7 @@ class FleetEngine:
         exactly-once completion is preserved (tests/test_fleet_invariants)."""
         edge = self.topo.edges[req.edge]
         req.migrating = False
-        heapq.heappush(edge.queue, (req.deadline_s, self._qseq, req))
-        self._qseq += 1
+        self._enqueue(edge, req)
         edge.tokens_owed += req.max_new_tokens - req.tokens_done
         if not edge.round_inflight:
             self._begin_round(edge, evq, metrics)

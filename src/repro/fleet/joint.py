@@ -21,7 +21,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.partitioner import CoInferencePlan
+from repro.serving.engine import quantize_bw
 from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
 from repro.fleet.coop import CoopAssignment, assign_spans
 
@@ -57,6 +60,11 @@ class JointPlanner:
         self.mobility = mobility
         self._sets = self._candidate_sets(topo)
         self._ordered_sets_cache = {}
+        # decide() hot path: per (quantized bw, device slowdown) the plans,
+        # assignments, and per-exit step times of every candidate set are
+        # fixed — precompute them once as flat arrays and score arrivals
+        # with elementwise numpy (see _score_tables)
+        self._score_cache = {}
 
     # ------------------------------------------------------------ candidates
     def _candidate_sets(self, topo: FleetTopology) -> List[Tuple[EdgeNode, ...]]:
@@ -93,6 +101,11 @@ class JointPlanner:
         out: List[Tuple[EdgeNode, ...]] = [()]
         seen = set()
         for primary in order:
+            if self.max_coop == 1:
+                # singleton candidates only: skip the O(M) partner scan per
+                # primary (the default replan fan-out at fleet scale)
+                out.append((edges[primary],))
+                continue
             partners = [e for e in order if e != primary]
             for k in range(1, min(self.max_coop, len(partners) + 1) + 1):
                 key = (primary,) + tuple(partners[:k - 1])
@@ -103,13 +116,116 @@ class JointPlanner:
         return out
 
     # ------------------------------------------------------------ decision
+    def _score_tables(self, bw: float, device: DeviceNode,
+                      topo: FleetTopology) -> dict:
+        """Per-(quantized bandwidth, device slowdown) candidate tensors:
+        plan, assignment, and per-exit step times of every kept candidate
+        set, flattened into arrays so :meth:`decide` scores one arrival with
+        a handful of elementwise numpy ops.  Built once per key by replaying
+        the scalar candidate loop (which also warms the shared plan cache
+        exactly as the scalar path would)."""
+        key = (quantize_bw(bw), device.slowdown)
+        hit = self._score_cache.get(key)
+        if hit is not None:
+            return hit
+        plans, assigns, accs, t_exit, t_min = [], [], [], [], []
+        is_local, primaries, sec = [], [], []
+        for cand in self._sets:
+            speeds = tuple(e.speed for e in cand)
+            plan = self.stepper.plan_multi(
+                bw, speeds, device_load=device.slowdown,
+                edge_bw_bps=topo.edge_bw_bps)
+            if (plan.partition == 0) != (len(cand) == 0):
+                continue               # collapsed duplicate of device-only
+            if plan.partition == 0:
+                assign = CoopAssignment((), (), ())
+                per_exit = self.stepper.per_exit_times_cached(
+                    0, bw, device_load=device.slowdown)
+                is_local.append(True)
+                primaries.append(0)
+                sec.append([])
+            else:
+                assign = assign_spans(plan.partition, cand)
+                per_exit = self.stepper.per_exit_times_coop_cached(
+                    plan.partition, assign.speeds, bw,
+                    device_load=device.slowdown,
+                    edge_bw_bps=topo.edge_bw_bps, include_input=False)
+                is_local.append(False)
+                primaries.append(assign.eids[0])
+                sec.append(list(zip(assign.eids[1:],
+                                    assign.span_fractions()[1:])))
+            plans.append(plan)
+            assigns.append(assign)
+            accs.append(plan.accuracy)
+            t_exit.append(per_exit[plan.exit_point - 1])
+            t_min.append(per_exit[0])
+        c = len(plans)
+        s_max = max((len(s) for s in sec), default=0)
+        sec_idx = np.zeros((c, s_max), dtype=int)
+        sec_frac = np.zeros((c, s_max))
+        for i, pairs in enumerate(sec):
+            for j, (eid, frac) in enumerate(pairs):
+                sec_idx[i, j], sec_frac[i, j] = eid, frac
+        order = sorted(range(c), key=lambda i: assigns[i].eids)
+        rank = np.empty(c, dtype=int)
+        rank[order] = np.arange(c)
+        hit = {
+            "plans": plans, "assigns": assigns,
+            "acc": np.array(accs), "t_exit": np.array(t_exit),
+            "t_min": np.array(t_min), "local": np.array(is_local),
+            "primary": np.array(primaries, dtype=int),
+            "sec_idx": sec_idx, "sec_frac": sec_frac, "rank": rank,
+        }
+        self._score_cache[key] = hit
+        return hit
+
     def decide(self, req, device: DeviceNode, topo: FleetTopology,
                now: float) -> JointDecision:
         """Algorithm-1 semantics lifted to the fleet: among candidates whose
         *estimated completion* (plan latency + current queueing) meets the
         request's deadline, take the most accurate exit (tie-break cheaper
         estimate, then lower edge ids); if none fits, minimize the estimate
-        — the fleet analogue of ``optimize_with_fallback``."""
+        — the fleet analogue of ``optimize_with_fallback``.
+
+        Scoring is vectorized over the candidate tensors of
+        :meth:`_score_tables`; every arithmetic step applies the same float
+        ops in the same order as :meth:`decide_scalar`, so the two paths
+        pick bit-identical decisions (property-pinned by
+        tests/test_fleet_perf.py)."""
+        bw = device.link.bw_at(now)
+        tab = self._score_tables(bw, device, topo)
+        blg = np.array([e.backlog_s() for e in topo.edges])
+        input_t = self.stepper.graph.input_bytes / bw
+        base = np.where(tab["local"], device.local_backlog_s(now),
+                        blg[tab["primary"]] + input_t)
+        # secondary backlog surcharges, span order (padded columns add 0.0)
+        for j in range(tab["sec_idx"].shape[1]):
+            base = base + blg[tab["sec_idx"][:, j]] * tab["sec_frac"][:, j]
+        prefill_steps = max(1, req.prompt_len // self.prefill_div)
+        est = base + tab["t_exit"] * prefill_steps + \
+            tab["t_exit"] * req.max_new_tokens
+        est_min = base + tab["t_exit"] * prefill_steps + \
+            tab["t_min"] * req.max_new_tokens
+        feasible = np.flatnonzero(est <= req.deadline_s - now)
+        if len(feasible):
+            # max accuracy, then min estimate, then lowest eids (rank):
+            # float equality grouping mirrors the tuple-key min()
+            acc = tab["acc"][feasible]
+            sub = feasible[acc == acc.max()]
+            sub = sub[est[sub] == est[sub].min()]
+            i = int(sub[tab["rank"][sub].argmin()])
+        else:
+            sub = np.flatnonzero(est_min == est_min.min())
+            i = int(sub[tab["rank"][sub].argmin()])
+        return JointDecision(plan=tab["plans"][i], assign=tab["assigns"][i],
+                             est_s=float(est[i]),
+                             est_min_s=float(est_min[i]))
+
+    def decide_scalar(self, req, device: DeviceNode, topo: FleetTopology,
+                      now: float) -> JointDecision:
+        """Reference implementation of :meth:`decide` (one Python loop over
+        candidate sets) — kept as the oracle the vectorized path is tested
+        against."""
         bw = device.link.bw_at(now)
         cands: List[JointDecision] = []
         for cand in self._sets:
@@ -186,10 +302,15 @@ class JointPlanner:
         collapses to an unusable plan: the caller keeps the request where
         it is."""
         did = device.did
+        drow = brow = None
         if self.mobility is not None:
-            order = tuple(sorted(
-                range(topo.num_edges),
-                key=lambda e: (self.mobility.distance(did, e, now), e)))
+            # one vectorized geometry row per replan instead of M scalar
+            # path-loss evaluations per candidate (entries are bit-identical
+            # to mobility.distance/bw)
+            drow = self.mobility.distance_row(did, now)
+            brow = self.mobility.bw_row(did, now)
+            order = tuple(sorted(range(topo.num_edges),
+                                 key=lambda e: (drow[e], e)))
         else:
             order = tuple(e.eid for e in sorted(
                 topo.edges, key=lambda e: (e.speed, e.eid)))
@@ -200,9 +321,8 @@ class JointPlanner:
             if not cand and not allow_local:
                 continue
             if self.mobility is not None:
-                eid0 = cand[0].eid if cand else \
-                    self.mobility.nearest(did, now)
-                bw = self.mobility.bw(did, eid0, now)
+                eid0 = cand[0].eid if cand else int(np.argmin(drow))
+                bw = float(brow[eid0])
             else:
                 bw = device.link.bw_at(now)
             speeds = tuple(e.speed for e in cand)

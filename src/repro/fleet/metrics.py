@@ -1,8 +1,19 @@
-"""Fleet-level observability: per-request records -> aggregate summary.
+"""Fleet-level observability: streaming aggregates + optional records.
 
 Everything is computed from plain floats recorded during the event loop, so
 two runs with the same seed produce bit-identical summaries (the determinism
 contract the tests assert).
+
+:meth:`FleetMetrics.summary` is a pure function of *running aggregates*
+maintained by :meth:`record`: counters, histograms, per-edge dicts, and two
+compact float buffers (latency and queue delay — exact percentiles and the
+``np.mean`` pairwise sum need the raw samples, ~16 bytes per request).
+The per-request :class:`RequestRecord` objects and the ``handover_log`` are
+*retention*, not inputs: with ``retain_records=False`` (the 10k-device /
+sweep setting) neither is kept and memory stays O(edges) + the two float
+buffers, while summaries are bit-identical to the retained run — a property
+pinned by tests/test_fleet_perf.py (hypothesis: streaming aggregates ==
+record-replay computation).
 """
 from __future__ import annotations
 
@@ -33,6 +44,9 @@ class RequestRecord:
 @dataclass
 class FleetMetrics:
     num_edges: int
+    # False drops per-request RequestRecord retention and the handover log
+    # (running aggregates only; summary() is unchanged either way)
+    retain_records: bool = True
     records: List[RequestRecord] = field(default_factory=list)
     edge_busy_s: Dict[int, float] = field(default_factory=dict)
     horizon_s: float = 0.0
@@ -49,10 +63,45 @@ class FleetMetrics:
     # traffic is conserved against transfer_bytes (invariant-tested)
     handover_log: List[tuple] = field(default_factory=list)
 
+    def __post_init__(self):
+        # ---- running aggregates (the only inputs summary() reads) ----
+        self._lat: List[float] = []        # per-request latency (percentiles)
+        self._qd: List[float] = []         # per-request queue delay (mean)
+        self._n = 0
+        self._met = 0                      # requests that met their SLO
+        self._coop = 0                     # cooperative (multi-edge) requests
+        self._moved_n = 0                  # requests with >= 1 handover ...
+        self._moved_met = 0                # ... and how many met their SLO
+        self._exits: Dict[int, int] = {}
+        self._parts: Dict[int, int] = {}
+        self._tenant_n: Dict[str, int] = {}
+        self._tenant_met: Dict[str, int] = {}
+        self._handover_count = 0
+        self._migrated_bytes = 0
+
     def record(self, rec: RequestRecord):
-        """Append one completed request (and advance the makespan)."""
-        self.records.append(rec)
+        """Fold one completed request into the running aggregates (and
+        retain the record itself when ``retain_records``)."""
+        self._n += 1
+        self._lat.append(rec.latency_s)
+        self._qd.append(rec.queue_delay_s)
+        if rec.met_slo:
+            self._met += 1
+        if len(rec.edges) > 1:
+            self._coop += 1
+        if rec.handovers > 0:
+            self._moved_n += 1
+            if rec.met_slo:
+                self._moved_met += 1
+        self._exits[rec.exit_point] = self._exits.get(rec.exit_point, 0) + 1
+        self._parts[rec.partition] = self._parts.get(rec.partition, 0) + 1
+        self._tenant_n[rec.tenant] = self._tenant_n.get(rec.tenant, 0) + 1
+        if rec.met_slo:
+            self._tenant_met[rec.tenant] = \
+                self._tenant_met.get(rec.tenant, 0) + 1
         self.horizon_s = max(self.horizon_s, rec.finish_s)
+        if self.retain_records:
+            self.records.append(rec)
 
     def add_busy(self, eid: int, dt_s: float):
         """Bill one round's slot-occupancy time to an edge."""
@@ -71,58 +120,53 @@ class FleetMetrics:
 
     def add_handover(self, src: int, dst: int, nbytes: int, t_s: float):
         """Log one mid-request migration completing at virtual time t_s."""
-        self.handover_log.append((round(t_s, 9), src, dst, nbytes))
+        self._handover_count += 1
+        self._migrated_bytes += nbytes
+        if self.retain_records:
+            self.handover_log.append((round(t_s, 9), src, dst, nbytes))
 
     @property
     def handover_count(self) -> int:
-        return len(self.handover_log)
+        return self._handover_count
 
     @property
     def migrated_bytes_total(self) -> int:
-        return sum(h[3] for h in self.handover_log)
+        return self._migrated_bytes
 
     # ------------------------------------------------------------ summaries
     def summary(self) -> Dict:
-        """Aggregate the per-request records into one flat dict.  Pure
-        function of the recorded floats — same seed, same summary, bitwise
-        (the determinism contract the tests and benchmarks assert)."""
-        if not self.records:
+        """Aggregate into one flat dict.  Pure function of the streaming
+        aggregates — same seed, same summary, bitwise, with or without
+        record retention (the determinism contract the tests and benchmarks
+        assert)."""
+        if self._n == 0:
             return {"requests": 0, "slo_attainment": 0.0}
-        lat = np.array([r.latency_s for r in self.records])
-        met = np.array([r.met_slo for r in self.records])
-        qd = np.array([r.queue_delay_s for r in self.records])
+        lat = np.array(self._lat)
+        qd = np.array(self._qd)
         horizon = max(self.horizon_s, 1e-9)
         util = {eid: round(self.edge_busy_s.get(eid, 0.0) / horizon, 6)
                 for eid in range(self.num_edges)}
-        exits: Dict[int, int] = {}
-        parts: Dict[int, int] = {}
-        per_tenant: Dict[str, List[bool]] = {}
-        for r in self.records:
-            exits[r.exit_point] = exits.get(r.exit_point, 0) + 1
-            parts[r.partition] = parts.get(r.partition, 0) + 1
-            per_tenant.setdefault(r.tenant, []).append(r.met_slo)
-        coop = sum(1 for r in self.records if len(r.edges) > 1)
-        moved = [r.met_slo for r in self.records if r.handovers > 0]
         return {
-            "requests": len(self.records),
-            "coop_requests": coop,
-            "handovers": self.handover_count,
-            "migrated_mb": round(self.migrated_bytes_total / 1e6, 6),
+            "requests": self._n,
+            "coop_requests": self._coop,
+            "handovers": self._handover_count,
+            "migrated_mb": round(self._migrated_bytes / 1e6, 6),
             # SLO attainment restricted to requests that migrated at least
             # once — how well handed-over requests still land their deadline
-            "handover_slo": float(np.mean(moved)) if moved else None,
+            "handover_slo": (self._moved_met / self._moved_n
+                             if self._moved_n else None),
             "backbone_mb": round(sum(self.transfer_bytes.values()) / 1e6, 6),
             "coop_busy_s": {eid: round(v, 6)
                             for eid, v in sorted(self.coop_busy_s.items())},
-            "slo_attainment": float(np.mean(met)),
+            "slo_attainment": self._met / self._n,
             "p50_latency_s": float(np.percentile(lat, 50)),
             "p95_latency_s": float(np.percentile(lat, 95)),
             "p99_latency_s": float(np.percentile(lat, 99)),
             "mean_queue_delay_s": float(np.mean(qd)),
             "makespan_s": float(self.horizon_s),
             "edge_utilization": util,
-            "slo_by_tenant": {k: float(np.mean(v))
-                              for k, v in sorted(per_tenant.items())},
-            "exit_histogram": dict(sorted(exits.items())),
-            "partition_histogram": dict(sorted(parts.items())),
+            "slo_by_tenant": {t: self._tenant_met.get(t, 0) / n
+                              for t, n in sorted(self._tenant_n.items())},
+            "exit_histogram": dict(sorted(self._exits.items())),
+            "partition_histogram": dict(sorted(self._parts.items())),
         }

@@ -30,12 +30,14 @@ backbone billing, re-binding) is executed by
 """
 from __future__ import annotations
 
+import math
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.bocd import BandwidthStateDetector
+from repro.core.bocd import BandwidthStateDetector, BOCDBank
 from repro.core.graph import InferenceGraph
 from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
 
@@ -51,16 +53,28 @@ class Trajectory:
     points: np.ndarray           # [K, 2]
 
     def pos(self, t_s: float) -> np.ndarray:
+        return np.array(self.pos_xy(t_s))
+
+    def pos_xy(self, t_s: float) -> Tuple[float, float]:
+        """Scalar hot path: the same interpolation as the ndarray ``pos``
+        over cached plain-float waypoint lists (``bisect`` instead of
+        ``searchsorted``, identical float64 arithmetic per component)."""
+        times = getattr(self, "_times_l", None)
+        if times is None:
+            times = self._times_l = [float(v) for v in self.times_s]
+            self._pts_l = [(float(p[0]), float(p[1])) for p in self.points]
+        pts = self._pts_l
         t = float(t_s)
-        times, pts = self.times_s, self.points
         if t <= times[0] or len(times) == 1:
             return pts[0]
         if t >= times[-1]:
             return pts[-1]
-        i = int(np.searchsorted(times, t, side="right"))
+        i = bisect_right(times, t)
         t0, t1 = times[i - 1], times[i]
         w = (t - t0) / max(t1 - t0, 1e-12)
-        return (1.0 - w) * pts[i - 1] + w * pts[i]
+        x0, y0 = pts[i - 1]
+        x1, y1 = pts[i]
+        return (1.0 - w) * x0 + w * x1, (1.0 - w) * y0 + w * y1
 
 
 def random_trajectory(rng: np.random.Generator, speed: float,
@@ -102,8 +116,20 @@ class MobilityModel:
     def pos(self, did: int, t_s: float) -> np.ndarray:
         return self.trajectories[did].pos(t_s)
 
+    def _edge_xy(self) -> List[Tuple[float, float]]:
+        xy = getattr(self, "_edge_xy_l", None)
+        if xy is None:
+            xy = self._edge_xy_l = [(float(p[0]), float(p[1]))
+                                    for p in self.edge_pos]
+        return xy
+
     def distance(self, did: int, eid: int, t_s: float) -> float:
-        return float(np.linalg.norm(self.pos(did, t_s) - self.edge_pos[eid]))
+        # sqrt(dx*dx + dy*dy): the exact reduction np.linalg.norm applies
+        # to a 2-vector, without building one
+        x, y = self.trajectories[did].pos_xy(t_s)
+        ex, ey = self._edge_xy()[eid]
+        dx, dy = x - ex, y - ey
+        return math.sqrt(dx * dx + dy * dy)
 
     def bw(self, did: int, eid: int, t_s: float) -> float:
         d = self.distance(did, eid, t_s)
@@ -116,9 +142,116 @@ class MobilityModel:
 
     def nearest(self, did: int, t_s: float) -> int:
         """Closest edge (deterministic tie-break on lowest eid)."""
-        p = self.pos(did, t_s)
-        d = np.linalg.norm(self.edge_pos - p[None, :], axis=1)
-        return int(np.argmin(d))        # argmin takes the first minimum
+        row = self.distance_row(did, t_s)
+        return int(np.argmin(row))      # argmin takes the first minimum
+
+    def distance_row(self, did: int, t_s: float) -> np.ndarray:
+        """One device's distance to every edge (``[M]``), entry ``e`` ==
+        ``distance(did, e, t_s)`` bitwise — the replanner's nearest-first
+        candidate ordering reads this instead of M scalar calls."""
+        x, y = self.trajectories[did].pos_xy(t_s)
+        dx = x - self.edge_pos[:, 0]
+        dy = y - self.edge_pos[:, 1]
+        return np.sqrt(dx * dx + dy * dy)
+
+    def bw_row(self, did: int, t_s: float) -> np.ndarray:
+        """One device's bandwidth to every edge (``[M]``), entry ``e`` ==
+        ``bw(did, e, t_s)`` bitwise — this row prices *replans*, so it must
+        match the engine's scalar billing exactly; the ``**`` runs through
+        scalar pow per edge because numpy's SIMD pow can differ from it in
+        the last ulp (see :meth:`bw_matrix`)."""
+        d = self.distance_row(did, t_s)
+        noise = 1.0
+        if self.noise is not None:
+            slot = min(max(int(t_s / self.noise_dt), 0),
+                       self.noise.shape[1] - 1)
+            noise = float(self.noise[did, slot])
+        peak, d_ref, exp_ = self.peak_bps, self.d_ref, self.path_exp
+        out = np.empty(len(d))
+        for e in range(len(d)):
+            raw = peak / (1.0 + (float(d[e]) / d_ref) ** exp_)
+            if self.noise is not None:
+                raw *= noise
+            out[e] = max(raw, self.floor_bps)
+        return out
+
+    # ------------------------------------------------- vectorized (per slot)
+    # The sampling sweep evaluates every device-edge pair once per time
+    # slot.  These batched paths apply the *same elementwise float64 ops*
+    # as pos()/distance()/bw() above, so each matrix entry is bit-identical
+    # to the corresponding scalar call (pinned by
+    # tests/test_fleet_perf.py::test_vectorized_mobility_matches_scalar) —
+    # they only drop the per-call Python and tiny-ndarray overhead.
+
+    def _pos_tables(self):
+        """Trajectory waypoints padded into rectangular arrays (cached):
+        ``(times [N, K] padded +inf, points [N, K, 2] padded with the last
+        waypoint, valid counts [N], last valid time [N])``."""
+        tabs = getattr(self, "_ptabs", None)
+        if tabs is None:
+            n = len(self.trajectories)
+            kv = np.array([len(tr.times_s) for tr in self.trajectories])
+            k = max(int(kv.max()), 2)
+            times = np.full((n, k), np.inf)
+            pts = np.empty((n, k, 2))
+            for i, tr in enumerate(self.trajectories):
+                ki = len(tr.times_s)
+                times[i, :ki] = tr.times_s
+                pts[i, :ki] = tr.points
+                pts[i, ki:] = tr.points[-1]
+            t_last = np.array([tr.times_s[-1] for tr in self.trajectories])
+            self._ptabs = tabs = (times, pts, kv, t_last)
+        return tabs
+
+    def positions_at(self, t_s: float) -> np.ndarray:
+        """All device positions at one instant: ``[N, 2]``, row ``d`` ==
+        ``pos(d, t_s)`` bitwise."""
+        t = float(t_s)
+        times, pts, kv, t_last = self._pos_tables()
+        n = len(kv)
+        rows = np.arange(n)
+        # count of waypoint times <= t == searchsorted(times, t, "right");
+        # +inf padding never counts.  Clamp into the valid interior so the
+        # gathers stay in-bounds; boundary rows are overwritten below.
+        i = np.clip((times <= t).sum(axis=1), 1, np.maximum(kv - 1, 1))
+        t0, t1 = times[rows, i - 1], times[rows, i]
+        p0, p1 = pts[rows, i - 1], pts[rows, i]
+        w = (t - t0) / np.maximum(t1 - t0, 1e-12)
+        out = (1.0 - w)[:, None] * p0 + w[:, None] * p1
+        first = (t <= times[:, 0]) | (kv == 1)
+        last = t >= t_last
+        return np.where(first[:, None], pts[:, 0],
+                        np.where(last[:, None],
+                                 pts[rows, np.maximum(kv - 1, 0)], out))
+
+    def distances_at(self, t_s: float) -> np.ndarray:
+        """Device-edge distance matrix ``[N, M]`` at one instant; entry
+        ``(d, e)`` == ``distance(d, e, t_s)`` bitwise."""
+        p = self.positions_at(t_s)
+        dx = p[:, 0][:, None] - self.edge_pos[:, 0][None, :]
+        dy = p[:, 1][:, None] - self.edge_pos[:, 1][None, :]
+        return np.sqrt(dx * dx + dy * dy)
+
+    def bw_matrix(self, t_s: float) -> np.ndarray:
+        """Device-edge bandwidth matrix ``[N, M]`` at one instant (the
+        path-loss law over :meth:`distances_at`).
+
+        Entry ``(d, e)`` equals ``bw(d, e, t_s)`` up to 1 ulp: numpy's
+        vectorized ``**`` may round differently from scalar ``pow`` in the
+        last bit (everything else — interpolation, distances, noise, floor
+        — is bit-exact; tests/test_fleet_perf.py pins the tolerance).  The
+        matrix only feeds the handover policies' *observations* (BOCD
+        samples, which are threshold decisions), never latency billing;
+        both paths are individually deterministic, and the registry
+        scenarios' metrics are pinned bit-identical to the pre-vectorized
+        engine."""
+        d = self.distances_at(t_s)
+        raw = self.peak_bps / (1.0 + (d / self.d_ref) ** self.path_exp)
+        if self.noise is not None:
+            slot = min(max(int(t_s / self.noise_dt), 0),
+                       self.noise.shape[1] - 1)
+            raw = raw * self.noise[:, slot][:, None]
+        return np.maximum(raw, self.floor_bps)
 
 
 @dataclass
@@ -198,6 +331,7 @@ class HandoverController:
 
     def reset(self):
         self.detectors: Dict[int, BandwidthStateDetector] = {}
+        self.bank: Optional[BOCDBank] = None
         self._last_fire: Dict[int, float] = {}
 
     # ------------------------------------------------------------ engine API
@@ -207,7 +341,13 @@ class HandoverController:
         the distinct edges currently hosting this device's in-flight
         requests (a device with several concurrent requests may be bound to
         several).  True => the engine should re-plan the device's in-flight
-        work."""
+        work.
+
+        This is the one-device path (lazy per-device detectors); the engine
+        drives the fleet through :meth:`observe_sweep` instead, which updates
+        every detector in one batched step.  Do not mix the two in one run —
+        the sweep's :class:`~repro.core.bocd.BOCDBank` and the lazy
+        ``detectors`` dict are separate state."""
         if self.policy == "none":
             return False
         if self.policy == "oracle":
@@ -241,6 +381,9 @@ class HandoverController:
             fire = len(det.changes) > n_before and bool(serving)
         if not fire:
             return False
+        return self._rate_limit(did, now)
+
+    def _rate_limit(self, did: int, now: float) -> bool:
         # rate-limit both policies: while a condition persists (a nearer
         # edge exists but replan keeps deciding to stay put), re-searching
         # every sample is wasted compute
@@ -249,6 +392,52 @@ class HandoverController:
             return False
         self._last_fire[did] = now
         return True
+
+    def observe_sweep(self, now: float, servings: List[Tuple[int, ...]],
+                      dist: np.ndarray, bw: np.ndarray) -> List[int]:
+        """One tick of the whole fleet's sampling grid: ``servings[did]``
+        lists the edges serving device ``did``; ``dist``/``bw`` are this
+        slot's :meth:`MobilityModel.distances_at` /
+        :meth:`MobilityModel.bw_matrix` matrices.  Returns the devices whose
+        in-flight work should re-plan, in ascending id order — exactly the
+        devices (and order) the per-device :meth:`observe` grid would have
+        fired, with all BOCD posteriors advanced in one
+        :class:`~repro.core.bocd.BOCDBank` step instead of a Python loop."""
+        if self.policy == "none":
+            return []
+        n = len(servings)
+        fired: List[int] = []
+        if self.policy == "oracle":
+            near = dist.argmin(axis=1)          # first minimum per row
+            for did, serving in enumerate(servings):
+                if not serving:
+                    continue
+                nr = int(near[did])
+                d_near = float(dist[did, nr])
+                if any(eid != nr and d_near <= (1.0 - self.hysteresis) *
+                       float(dist[did, eid]) for eid in serving) and \
+                        self._rate_limit(did, now):
+                    fired.append(did)
+            return fired
+        # bocd: one bank row per device, all rows updated in lockstep (the
+        # engine samples every device on the same grid, so run lengths agree)
+        if self.bank is None:
+            self.bank = BOCDBank(n, hazard=self.hazard)
+        near = dist.argmin(axis=1)
+        # idle devices sample their best signal (vectorized gather); only
+        # devices with in-flight work pick a serving link in Python
+        xs = bw[np.arange(n), near]
+        has_serving = np.zeros(n, dtype=bool)
+        for did, serving in enumerate(servings):
+            if serving:
+                eid = max(serving, key=lambda e: (float(dist[did, e]), e))
+                has_serving[did] = True
+                xs[did] = bw[did, eid]
+        changed = self.bank.update(xs / MBPS) & has_serving
+        for did in np.flatnonzero(changed):
+            if self._rate_limit(int(did), now):
+                fired.append(int(did))
+        return fired
 
 
 def make_mobile_fleet(num_devices: int, num_edges: int, *, seed: int = 0,

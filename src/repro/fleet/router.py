@@ -11,6 +11,8 @@ from __future__ import annotations
 
 from typing import Optional
 
+import numpy as np
+
 from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
 from repro.fleet.joint import JointDecision, JointPlanner
 
@@ -64,23 +66,45 @@ class BandwidthAwareRouter(Router):
     planner's predicted co-inference latency at the device's current
     bandwidth on that edge's hardware (``edge.speed``).  Requires a
     :class:`~repro.serving.engine.CoInferenceStepper` for plan lookups (its
-    plan cache is shared with the fleet engine)."""
+    plan cache is shared with the fleet engine).
+
+    Scoring is vectorized over the edges: the per-edge step time at the
+    plan's exit is a pure function of (quantized bandwidth, plan, device
+    slowdown) and is cached as one array; per arrival only the backlog
+    vector is fresh.  ``argmin`` takes the first minimum, which is the
+    lowest eid — the same ``(est, eid)`` tie-break as the scalar loop."""
     name = "bandwidth-aware"
 
     def __init__(self, stepper):
         self.stepper = stepper
+        self._steps = {}
+
+    def reset(self):
+        # step-vector entries are pure values — they survive resets; the
+        # dict is bounded by (qbw x plan x slowdown) like the step cache
+        pass
 
     def route(self, req, device, topo, now) -> EdgeNode:
+        from repro.serving.engine import quantize_bw
         bw = device.link.bw_at(now)
         plan = self.stepper.plan(bw)
-
-        def est(edge: EdgeNode) -> float:
-            step = self.stepper.per_exit_times_cached(
-                plan.partition, bw, edge_load=edge.speed,
-                device_load=device.slowdown)[plan.exit_point - 1]
-            return edge.backlog_s() + step * req.max_new_tokens
-
-        return min(topo.edges, key=lambda e: (est(e), e.eid))
+        # keyed on the immutable inputs (incl. the edge-speed tuple, which
+        # also pins the edge order), never on object identity — a router
+        # instance may outlive the topology it first served
+        key = (quantize_bw(bw), plan.partition, plan.exit_point,
+               device.slowdown, tuple(e.speed for e in topo.edges))
+        steps = self._steps.get(key)
+        if steps is None:
+            steps = self._steps[key] = np.array([
+                self.stepper.per_exit_times_cached(
+                    plan.partition, bw, edge_load=e.speed,
+                    device_load=device.slowdown)[plan.exit_point - 1]
+                for e in topo.edges])
+        blg = np.array([(e.ema_round_s if e.ema_round_s > 0 else 1e-3)
+                        * e.tokens_owed / max(e.capacity, 1)
+                        for e in topo.edges])   # inlined EdgeNode.backlog_s
+        est = blg + steps * req.max_new_tokens
+        return topo.edges[int(est.argmin())]
 
 
 class NearestEdgeRouter(Router):

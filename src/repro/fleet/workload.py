@@ -28,10 +28,15 @@ DEFAULT_TENANTS = (
 )
 
 
-@dataclass
+@dataclass(eq=False)
 class FleetRequest:
     """One request in a fleet simulation: identity + SLO contract up top,
-    engine-owned runtime state below (reset by every ``FleetEngine.run``)."""
+    engine-owned runtime state below (reset by every ``FleetEngine.run``).
+
+    ``eq=False``: requests are unique live objects — membership tests and
+    removals on engine queues are identity checks, not field-by-field
+    comparisons (which sat on the hot path and are ambiguous once ``prompt``
+    holds an array)."""
     rid: int
     device: int
     tenant: str

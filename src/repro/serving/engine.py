@@ -29,7 +29,8 @@ import numpy as np
 
 from repro.core.graph import InferenceGraph
 from repro.core.partitioner import (CoInferencePlan, branch_latency,
-                                    multi_branch_latency, proportional_cuts)
+                                    branch_preds, multi_branch_latency,
+                                    proportional_cuts)
 from repro.core.planner import EdgentPlanner
 from repro.models.api import Model
 from repro.serving.scheduler import SLOScheduler, pick_exit
@@ -100,6 +101,10 @@ class CoInferenceStepper:
         self.plan_cache: Dict[tuple, CoInferencePlan] = \
             plan_cache if plan_cache is not None else {}
         self._step_cache: Dict[tuple, List[float]] = {}
+        # (exit, assignment, backbone bw) -> precomputed hop/span timeline;
+        # lives on the stepper so every engine sharing it (the whole fleet)
+        # shares one memo — see FleetEngine._emit_hops
+        self.hop_cache: Dict[tuple, object] = {}
         self._decode_jit: Dict[Optional[int], object] = {}
         self.n_graph = graph.num_exits
         self.n_model = model.num_segments if model is not None else graph.num_exits
@@ -154,13 +159,42 @@ class CoInferenceStepper:
             t -= self.graph.input_bytes / bw_bps
         return t
 
+    def _branch_preds(self):
+        """Memoized :func:`~repro.core.partitioner.branch_preds` for this
+        stepper's (graph, models) triple — bit-exact input to the inlined
+        latency accumulations below (see branch_preds for the contract)."""
+        f_edge, f_device = self.planner.f_edge, self.planner.f_device
+        key = (id(f_edge), id(f_device))
+        if getattr(self, "_pred_key", None) != key:
+            self._pred_key = key
+            self._preds = branch_preds(self.graph, f_edge, f_device)
+        return self._preds
+
     def per_exit_times(self, partition: int, bw_bps: float, *,
                        edge_load: float = 1.0, device_load: float = 1.0,
                        include_input: bool = True) -> List[float]:
-        return [self.step_time(e, partition, bw_bps, edge_load=edge_load,
-                               device_load=device_load,
-                               include_input=include_input)
-                for e in self.exit_points]
+        # inlined branch_latency over memoized per-layer predictions: the
+        # identical float terms in the identical order as step_time(), minus
+        # the per-call predictor dispatch (this sits under every fleet
+        # round's cache miss)
+        pe_all, pd_all = self._branch_preds()
+        graph, p = self.graph, partition
+        out = []
+        for e in self.exit_points:
+            pe, pd = pe_all[e - 1], pd_all[e - 1]
+            t = 0.0
+            if p > 0:
+                t += graph.input_bytes / bw_bps
+                t += graph.cut_bytes(e, p) / bw_bps
+            for j in range(len(pe)):
+                if j < p:
+                    t += pe[j] * edge_load
+                else:
+                    t += pd[j] * device_load
+            if not include_input and p > 0:
+                t -= graph.input_bytes / bw_bps
+            out.append(t)
+        return out
 
     def input_time(self, partition: int, bw_bps: float) -> float:
         """One-shot input uplink cost (zero for device-only plans)."""
@@ -213,7 +247,8 @@ class CoInferenceStepper:
                                      self.planner.f_edge,
                                      self.planner.f_device, qbw,
                                      device_load=device_load,
-                                     edge_bw_bps=edge_bw_bps)
+                                     edge_bw_bps=edge_bw_bps,
+                                     preds=self._branch_preds())
             if not include_input and p_e > 0:
                 t -= self.graph.input_bytes / qbw
             out.append(t)

@@ -22,3 +22,5 @@ from repro.sim.spec import (DerivedSeeds, EngineSpec,  # noqa: F401
                             MobilitySpec, PlannerSpec, RouterSpec,
                             ScenarioSpec, TopologySpec, WorkloadSpec,
                             apply_overrides)
+from repro.sim.sweep import (grid_cells, random_cells,  # noqa: F401
+                             run_sweep)

@@ -181,7 +181,8 @@ class Simulation:
             dtype=dtype, demote_on_deadline=spec.engine.demote_on_deadline,
             prefill_div=spec.engine.prefill_div, mobility=mobility,
             handover=handover, replan_max_coop=spec.engine.replan_max_coop,
-            max_coop=spec.router.max_coop)
+            max_coop=spec.router.max_coop,
+            retain_records=spec.engine.retain_records)
         sc.topo, sc.mobility, sc.handover = topo, mobility, handover
         sc.workload, sc.engine = workload, engine
         self.scenario = sc

@@ -52,7 +52,9 @@ def _resolve_spec(args) -> ScenarioSpec:
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.sim",
-        description="Run a declarative fleet scenario (docs/api.md).")
+        description="Run a declarative fleet scenario (docs/api.md).",
+        epilog="For grid/random sweeps over scenarios (parallel cells, "
+               "JSONL output) use `python -m repro.sim.sweep`.")
     ap.add_argument("--scenario", metavar="NAME",
                     help="registered scenario name (see --list)")
     ap.add_argument("--spec", metavar="FILE",

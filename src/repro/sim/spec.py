@@ -209,13 +209,17 @@ class EngineSpec(_Spec):
     """FleetEngine knobs: timing-only simulation by default;
     ``real_decode=True`` also runs the actual model (B=1 caches, jitted
     per-exit variants) — ``dtype`` then names the cache dtype (e.g.
-    ``'float32'``, ``'bfloat16'``)."""
+    ``'float32'``, ``'bfloat16'``).  ``retain_records=False`` keeps
+    FleetMetrics to its running aggregates (identical summaries, no
+    per-request record/handover-log retention) — the 10k-device / sweep
+    setting (docs/performance.md)."""
     real_decode: bool = False
     dtype: Optional[str] = None
     dynamic: bool = False
     demote_on_deadline: bool = True
     prefill_div: int = 8
     replan_max_coop: int = 1
+    retain_records: bool = True
 
 
 @dataclass

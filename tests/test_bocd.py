@@ -42,3 +42,27 @@ def test_run_length_truncation_bounded():
     for x in rng.normal(0, 1, 500):
         det.update(float(x))
     assert len(det.r_prob) <= 65
+
+
+def test_bank_matches_scalar_detectors():
+    """BOCDBank row i must track an independent BOCD fed the same stream
+    bit-exactly (same posteriors, same change flags) — the fleet's sampling
+    sweep relies on the lockstep batch being a pure vectorization."""
+    from repro.core.bocd import BOCDBank
+    rng = np.random.default_rng(7)
+    n, steps = 5, 300
+    bank = BOCDBank(n, hazard=1 / 30.0, max_run=96)
+    dets = [BOCD(hazard=1 / 30.0, max_run=96) for _ in range(n)]
+    # distinct regimes per row, with mean shifts at different times
+    streams = [np.concatenate([rng.normal(m, 0.3, steps // 3)
+                               for m in rng.uniform(0.5, 6.0, 3)])
+               for _ in range(n)]
+    for t in range(steps):
+        x = np.array([streams[i][t] for i in range(n)])
+        changed = bank.update(x)
+        for i in range(n):
+            assert bool(changed[i]) == dets[i].update(float(x[i])), (i, t)
+            assert np.array_equal(bank.r_prob[i], dets[i].r_prob), (i, t)
+            assert np.array_equal(bank.mu[i], dets[i].mu), (i, t)
+            assert np.array_equal(bank.beta[i], dets[i].beta), (i, t)
+            assert bank.map_run[i] == dets[i].map_run, (i, t)

@@ -19,6 +19,35 @@ def test_event_queue_orders_by_time_then_fifo():
     assert q.now == 2.0
 
 
+def test_event_queue_tie_break_contract():
+    """The ordering contract the vectorized sample sweep relies on
+    (repro.fleet.events module docstring): same-timestamp events pop
+    strictly in push order — independent of kind and payload — and an
+    event pushed *while handling* time t pops after everything already
+    scheduled at t.  This is what makes one fleet-wide sweep equivalent to
+    the per-device sample events it batches: those popped contiguously in
+    device (push) order, ahead of any same-time event pushed during their
+    handling."""
+    q = EventQueue()
+    # interleave kinds/payloads that would sort differently than seq order
+    q.push(1.0, "zzz", {"x": 1})
+    q.push(1.0, "aaa", None)
+    q.push(1.0, "mmm", 42)
+    first = q.pop()
+    assert (first.kind, q.now) == ("zzz", 1.0)
+    # handling the first t=1.0 event schedules more work at the SAME time:
+    # it must land after the rest of the t=1.0 batch
+    q.push(1.0, "late-same-t")
+    q.push(0.5, "earlier-time-is-still-earlier")  # but an earlier time wins
+    kinds = [q.pop().kind for _ in range(4)]
+    assert kinds == ["earlier-time-is-still-earlier", "aaa", "mmm",
+                     "late-same-t"]
+    # seq strictly increases across pushes, making the order total
+    a = q.push(3.0, "x")
+    b = q.push(3.0, "x")
+    assert a.seq < b.seq
+
+
 def test_pick_exit_nothing_fits_floors_at_one():
     per_exit = [0.5, 1.0, 2.0]
     assert pick_exit(0.0, per_exit, tokens_left=5, preferred=3) == 1

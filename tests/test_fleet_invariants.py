@@ -83,7 +83,7 @@ class _MonotoneQueue:
             assert e.coop_inflight >= 0
             # the O(1) owed-token counter must track the ground truth
             owed = sum(r.max_new_tokens - r.tokens_done
-                       for _, _, r in e.queue) + \
+                       for _, _, r in e.queue if r is not None) + \
                 sum(r.max_new_tokens - r.tokens_done for r in e.active)
             assert e.tokens_owed == owed
         self.pops += 1

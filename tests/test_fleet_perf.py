@@ -1,0 +1,437 @@
+"""Pins for the vectorized fleet hot path (PR: 10k-device simulations).
+
+The rewrite's contract is *bit-identical metrics, order-of-magnitude
+faster*; these tests pin the bit-identical half:
+
+* batched mobility geometry (positions/distances/bandwidth matrices and
+  rows) equals the scalar law entry by entry,
+* the vectorized ``JointPlanner.decide`` equals its scalar reference on
+  every arrival of a live simulation,
+* streaming ``FleetMetrics`` aggregates equal the record-replay computation
+  (hypothesis-fuzzed) and are unaffected by ``retain_records``,
+* the ``smoke-lm`` / ``smoke-mobility`` registry scenarios reproduce the
+  exact pre-refactor summaries (golden floats recorded before the rewrite),
+* tombstoned queue entries behave as removals,
+* ``_on_arrival`` prices the plan at the *serving* edge's bandwidth under
+  mobility (not the best-signal bandwidth the router shopped with).
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.fleet.metrics import FleetMetrics, RequestRecord
+from repro.sim import (MobilitySpec, PlannerSpec, RouterSpec, ScenarioSpec,
+                       Simulation, TopologySpec, WorkloadSpec, get_scenario)
+
+# ---------------------------------------------------------------- mobility
+
+
+def _mobile_scenario(**kw):
+    spec = ScenarioSpec(
+        name="perf-mob", seed=kw.pop("seed", 0),
+        planner=PlannerSpec(result_kb=4.0),
+        topology=TopologySpec(kind="mobile", num_devices=kw.pop("nd", 12),
+                              num_edges=kw.pop("ne", 5), speed=0.4,
+                              horizon_s=30.0, noise_sigma=0.1),
+        workload=WorkloadSpec(rate_hz=4.0, horizon_s=6.0),
+        router=RouterSpec(name="nearest"),
+        mobility=MobilitySpec(policy="bocd"))
+    return Simulation(spec).build()
+
+
+def _ulp_diff(a: float, b: float) -> int:
+    ia = np.float64(a).view(np.int64)
+    ib = np.float64(b).view(np.int64)
+    return abs(int(ia) - int(ib))
+
+
+def test_vectorized_mobility_matches_scalar():
+    """Positions, distances, and the replan bandwidth row must equal the
+    scalar calls *bitwise* (they price billing and replans); the sweep's
+    bandwidth matrix — observation input only — is allowed numpy's
+    vectorized-pow rounding of at most 1 ulp (see MobilityModel.bw_matrix).
+    Boundaries covered: t=0 (first waypoint), far beyond the horizon
+    (parked devices), off-grid interior times."""
+    sc = _mobile_scenario()
+    mob = sc.mobility
+    n, m = len(mob.trajectories), len(mob.edge_pos)
+    for t in (0.0, 0.37, 1.0, 7.77, 15.5, 29.99, 31.0, 500.0):
+        pos = mob.positions_at(t)
+        dist = mob.distances_at(t)
+        bw = mob.bw_matrix(t)
+        for d in range(n):
+            assert pos[d].tolist() == mob.pos(d, t).tolist(), (d, t)
+            row_d = mob.distance_row(d, t)
+            row_b = mob.bw_row(d, t)
+            for e in range(m):
+                assert float(dist[d, e]) == mob.distance(d, e, t), (d, e, t)
+                assert float(row_d[e]) == mob.distance(d, e, t), (d, e, t)
+                assert float(row_b[e]) == mob.bw(d, e, t), (d, e, t)
+                # the vectorized pow's 1-ulp rounding difference can grow
+                # by a couple more ulp through the following divide/noise
+                assert _ulp_diff(float(bw[d, e]),
+                                 mob.bw(d, e, t)) <= 4, (d, e, t)
+            assert mob.nearest(d, t) == int(np.argmin(dist[d]))
+
+
+def test_sample_sweep_equals_per_device_observe():
+    """One fleet-wide sweep tick fires exactly the devices a per-device
+    loop of scalar detectors would, in ascending id order — both fed the
+    *same* per-slot matrices, so this pins the BOCDBank lockstep update and
+    the firing/rate-limit logic (the geometry equivalence is pinned
+    separately)."""
+    from repro.core.bocd import BandwidthStateDetector
+    from repro.fleet.mobility import MBPS, HandoverController
+    sc = _mobile_scenario()
+    mob = sc.mobility
+    n = len(mob.trajectories)
+    ctrl = HandoverController(mob, policy="bocd", min_gap_s=0.0)
+    detectors = {}
+    rng = np.random.default_rng(0)
+    for k in range(1, 40):
+        t = 0.5 * k
+        servings = [tuple(sorted(int(e) for e in rng.choice(
+            len(mob.edge_pos), size=rng.integers(0, 3), replace=False)))
+            for _ in range(n)]
+        dist, bw = mob.distances_at(t), mob.bw_matrix(t)
+        # reference: the pre-sweep per-device grid, on the same matrices
+        fired_ref = []
+        for d in range(n):
+            serving = servings[d]
+            if serving:
+                eid = max(serving, key=lambda e: (float(dist[d, e]), e))
+            else:
+                eid = int(np.argmin(dist[d]))
+            det = detectors.setdefault(d, BandwidthStateDetector(
+                hazard=ctrl.hazard))
+            before = len(det.changes)
+            det.update(float(bw[d, eid]) / MBPS)
+            if len(det.changes) > before and serving:
+                fired_ref.append(d)
+        fired_sweep = ctrl.observe_sweep(t, servings, dist, bw)
+        assert fired_ref == fired_sweep, (k, fired_ref, fired_sweep)
+
+
+def test_oracle_sweep_equals_per_device_observe():
+    from repro.fleet.mobility import HandoverController
+    sc = _mobile_scenario()
+    mob = sc.mobility
+    n = len(mob.trajectories)
+    a = HandoverController(mob, policy="oracle", min_gap_s=0.0)
+    b = HandoverController(mob, policy="oracle", min_gap_s=0.0)
+    rng = np.random.default_rng(1)
+    for k in range(1, 40):
+        t = 0.5 * k
+        servings = [tuple(sorted(rng.choice(
+            len(mob.edge_pos), size=rng.integers(0, 3), replace=False)))
+            for _ in range(n)]
+        assert [d for d in range(n) if a.observe(d, t, servings[d])] == \
+            b.observe_sweep(t, servings, mob.distances_at(t),
+                            mob.bw_matrix(t))
+
+
+# ---------------------------------------------------------------- planner
+
+
+def test_joint_decide_vectorized_matches_scalar():
+    """Every arrival of a live coop simulation: the vectorized candidate
+    scoring must pick the identical (plan, assignment, estimates)."""
+    import repro.fleet.joint as J
+    checked = [0]
+    orig = J.JointPlanner.decide
+
+    def both(self, req, device, topo, now):
+        a = orig(self, req, device, topo, now)
+        b = J.JointPlanner.decide_scalar(self, req, device, topo, now)
+        assert (a.plan, a.assign, a.est_s, a.est_min_s) == \
+            (b.plan, b.assign, b.est_s, b.est_min_s), req.rid
+        checked[0] += 1
+        return a
+
+    spec = ScenarioSpec(
+        name="joint-vec", seed=5,
+        topology=TopologySpec(num_devices=16, num_edges=4, edge_capacity=4,
+                              lo_mbps=0.1, hi_mbps=6.0,
+                              max_edge_slowdown=4.0),
+        workload=WorkloadSpec(rate_hz=20.0, horizon_s=6.0, device_skew=1.0),
+        router=RouterSpec(name="joint"))
+    J.JointPlanner.decide = both
+    try:
+        Simulation(spec).run()
+    finally:
+        J.JointPlanner.decide = orig
+    assert checked[0] > 50
+
+
+# ---------------------------------------------------------------- metrics
+
+
+def _replay_summary(m: FleetMetrics) -> dict:
+    """The pre-streaming FleetMetrics.summary, recomputed from retained
+    records — the oracle the running aggregates must match bitwise."""
+    if not m.records:
+        return {"requests": 0, "slo_attainment": 0.0}
+    lat = np.array([r.latency_s for r in m.records])
+    met = np.array([r.met_slo for r in m.records])
+    qd = np.array([r.queue_delay_s for r in m.records])
+    horizon = max(m.horizon_s, 1e-9)
+    util = {eid: round(m.edge_busy_s.get(eid, 0.0) / horizon, 6)
+            for eid in range(m.num_edges)}
+    exits, parts, per_tenant = {}, {}, {}
+    for r in m.records:
+        exits[r.exit_point] = exits.get(r.exit_point, 0) + 1
+        parts[r.partition] = parts.get(r.partition, 0) + 1
+        per_tenant.setdefault(r.tenant, []).append(r.met_slo)
+    coop = sum(1 for r in m.records if len(r.edges) > 1)
+    moved = [r.met_slo for r in m.records if r.handovers > 0]
+    return {
+        "requests": len(m.records),
+        "coop_requests": coop,
+        "handovers": len(m.handover_log),
+        "migrated_mb": round(sum(h[3] for h in m.handover_log) / 1e6, 6),
+        "handover_slo": float(np.mean(moved)) if moved else None,
+        "backbone_mb": round(sum(m.transfer_bytes.values()) / 1e6, 6),
+        "coop_busy_s": {eid: round(v, 6)
+                        for eid, v in sorted(m.coop_busy_s.items())},
+        "slo_attainment": float(np.mean(met)),
+        "p50_latency_s": float(np.percentile(lat, 50)),
+        "p95_latency_s": float(np.percentile(lat, 95)),
+        "p99_latency_s": float(np.percentile(lat, 99)),
+        "mean_queue_delay_s": float(np.mean(qd)),
+        "makespan_s": float(m.horizon_s),
+        "edge_utilization": util,
+        "slo_by_tenant": {k: float(np.mean(v))
+                          for k, v in sorted(per_tenant.items())},
+        "exit_histogram": dict(sorted(exits.items())),
+        "partition_histogram": dict(sorted(parts.items())),
+    }
+
+
+def _feed(metrics: FleetMetrics, events: list):
+    rid = 0
+    for kind, a, b, c in events:
+        if kind == 0:
+            arrival, lat, qdelay = a, b, c
+            metrics.record(RequestRecord(
+                rid=rid, tenant=("t%d" % (rid % 3)), device=rid % 5,
+                edge=rid % 4 - 1, arrival_s=arrival, finish_s=arrival + lat,
+                latency_s=lat, queue_delay_s=qdelay,
+                met_slo=bool(rid % 2), exit_point=1 + rid % 3,
+                partition=rid % 5,
+                edges=tuple(range(rid % 3)), handovers=rid % 3,
+                migrated_bytes=(rid % 3) * 1000))
+            rid += 1
+        elif kind == 1:
+            metrics.add_busy(int(a) % 4, b)
+        elif kind == 2:
+            metrics.add_transfer(int(a) % 4, int(b) % 4, int(c * 1e6))
+        elif kind == 3:
+            metrics.add_handover(int(a) % 4, int(b) % 4, int(c * 1e6), a + b)
+            metrics.add_coop_busy(int(a) % 4, c)
+
+
+@settings(max_examples=30, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.integers(min_value=0, max_value=3),
+              st.floats(min_value=0.0, max_value=100.0),
+              st.floats(min_value=0.0, max_value=50.0),
+              st.floats(min_value=0.0, max_value=10.0)),
+    min_size=0, max_size=60))
+def test_streaming_metrics_equal_record_replay(events):
+    """Property: for any record stream, the streaming aggregates reproduce
+    the record-replay summary bitwise, and dropping retention changes
+    nothing but the retention itself."""
+    retained = FleetMetrics(num_edges=4)
+    compact = FleetMetrics(num_edges=4, retain_records=False)
+    _feed(retained, events)
+    _feed(compact, events)
+    assert retained.summary() == _replay_summary(retained)
+    assert compact.summary() == retained.summary()
+    assert compact.records == [] and compact.handover_log == []
+    assert compact.handover_count == retained.handover_count
+    assert compact.migrated_bytes_total == retained.migrated_bytes_total
+
+
+def test_streaming_metrics_equal_replay_end_to_end():
+    """Same property on a real simulation's metrics (mobility + handovers:
+    every aggregate path exercised)."""
+    m = Simulation(get_scenario("smoke-mobility")).run()
+    assert m.summary() == _replay_summary(m)
+
+
+def test_retain_records_off_is_bit_identical_end_to_end():
+    from dataclasses import replace
+    base = get_scenario("smoke-mobility")
+    spec = replace(base, engine=replace(base.engine, retain_records=False))
+    a = Simulation(base).run()
+    b = Simulation(spec).run()
+    assert a.summary() == b.summary()
+    assert b.records == [] and b.handover_log == []
+    assert b.handover_count == a.handover_count
+
+
+# ------------------------------------------------- pre/post refactor pins
+# Golden floats recorded from the pre-rewrite engine (PR 4 tree) on the
+# registry scenarios: the vectorized hot path must reproduce them exactly.
+
+GOLDEN_SMOKE_LM = {
+    "requests": 1356,
+    "slo_attainment": 0.5376106194690266,
+    "p50_latency_s": 0.6615177717071261,
+    "p95_latency_s": 47.09573076173493,
+    "p99_latency_s": 53.90370828429884,
+    "mean_queue_delay_s": 7.599025976156218,
+    "makespan_s": 84.68538310386597,
+    "handovers": 0,
+}
+
+GOLDEN_SMOKE_MOBILITY = {
+    "requests": 229,
+    "slo_attainment": 0.7903930131004366,
+    "p50_latency_s": 1.2943226555145273,
+    "p95_latency_s": 5.6746156237852325,
+    "p99_latency_s": 8.180382220563278,
+    "mean_queue_delay_s": 0.32956362837827147,
+    "makespan_s": 30.465720733163874,
+    "handovers": 11,
+    "migrated_mb": 0.674976,
+    "handover_slo": 0.9090909090909091,
+}
+
+GOLDEN_SMOKE_MOBILITY_HANDOVER_LOG = [
+    (5.011523842, 0, 2, 82944), (7.002356407, 0, 2, 86240),
+    (8.514628819, 1, 2, 52224), (10.046677844, 3, 0, 27648),
+    (10.514468059, 3, 0, 31488), (14.563789431, 3, 0, 65856),
+    (16.013483797, 1, 3, 71424), (20.028524651, 3, 0, 53760),
+    (22.023524772, 3, 1, 85248), (24.519732814, 3, 1, 49152),
+    (26.504036614, 2, 0, 68992),
+]
+
+
+def test_smoke_lm_summary_pinned_pre_refactor():
+    s = Simulation(get_scenario("smoke-lm")).run().summary()
+    for key, val in GOLDEN_SMOKE_LM.items():
+        assert s[key] == val, key
+
+
+def test_smoke_mobility_summary_pinned_pre_refactor():
+    m = Simulation(get_scenario("smoke-mobility")).run()
+    s = m.summary()
+    for key, val in GOLDEN_SMOKE_MOBILITY.items():
+        assert s[key] == val, key
+    assert m.handover_log == GOLDEN_SMOKE_MOBILITY_HANDOVER_LOG
+
+
+# ---------------------------------------------------------------- engine
+
+
+def test_tombstoned_queue_entry_is_skipped():
+    """A dequeued request's heap entry stays physically queued but must
+    never be admitted, and backlog() must not count it."""
+    import heapq
+
+    from repro.fleet.cluster import EdgeNode
+    sc = Simulation(get_scenario("smoke-lm")).build()
+    eng, wl = sc.engine, sc.workload
+    eng._qseq, eng._qentry = 0, {}
+    edge = EdgeNode(0, capacity=2)
+    r1, r2, r3 = wl[0], wl[1], wl[2]
+    for r in (r1, r2, r3):
+        r.admitted_s, r.assign, r.plan = None, None, sc.engine.stepper.plan(1e6)
+        r.prefill_pending = False
+    for r in (r1, r2, r3):
+        eng._enqueue(edge, r)
+    assert edge.backlog() == 3
+    eng._dequeue(edge, r2)
+    assert edge.backlog() == 2 and edge.q_dead == 1
+    admitted = []
+    while edge.queue and len(admitted) < 3:
+        req = heapq.heappop(edge.queue)[2]
+        if req is None:
+            edge.q_dead -= 1
+            continue
+        admitted.append(req)
+    assert [id(a) for a in admitted] == \
+        [id(r) for r in sorted((r1, r3), key=lambda r: r.deadline_s)]
+    assert edge.q_dead == 0
+
+
+def test_arrival_plans_at_serving_edge_bandwidth():
+    """Satellite fix: with a placement policy that is *not* nearest-edge,
+    the admitted plan must be priced at the serving edge's bandwidth, not
+    the best-signal bandwidth the router shopped with."""
+    from repro.fleet.events import EventQueue
+    from repro.fleet.metrics import FleetMetrics as FM
+    spec = ScenarioSpec(
+        name="arrival-bw", seed=2,
+        planner=PlannerSpec(result_kb=4.0),
+        # flat-ish path loss so non-nearest edges still sustain offloading
+        # and jsq genuinely places requests away from the nearest edge
+        topology=TopologySpec(kind="mobile", num_devices=12, num_edges=4,
+                              speed=0.0, horizon_s=30.0, noise_sigma=0.0,
+                              peak_mbps=20.0, d_ref=0.6),
+        workload=WorkloadSpec(rate_hz=20.0, horizon_s=4.0),
+        router=RouterSpec(name="jsq"))
+    sc = Simulation(spec).build()
+    eng, mob = sc.engine, sc.mobility
+    evq = EventQueue()
+    eng._qseq, eng._pending = 0, len(sc.workload)
+    eng._qentry = {}
+    eng._dev_inflight = {d.did: [] for d in sc.topo.devices}
+    metrics = FM(num_edges=sc.topo.num_edges)
+    differing = repriced = 0
+    for req in sc.workload:
+        device = sc.topo.devices[req.device]
+        evq.now = req.arrival_s
+        bw_best = device.link.bw_at(req.arrival_s)
+        eng._on_arrival(req, evq, metrics)
+        if req.edge < 0:                   # device-only fallback is legal
+            assert req.plan.partition == 0
+            continue
+        bw_serve = mob.bw(device.did, req.edge, evq.now)
+        assert req.plan == eng.stepper.plan(bw_serve), req.rid
+        if req.edge != mob.nearest(device.did, req.arrival_s):
+            differing += 1                 # serving != best-signal edge
+            if eng.stepper.plan(bw_serve) != eng.stepper.plan(bw_best):
+                repriced += 1              # ... and the plan truly changed
+    # jsq spreads load, so the property must have been exercised for real
+    assert differing > 0 and repriced > 0
+
+
+@pytest.mark.perf
+def test_thousand_device_mobility_cell_runs():
+    """Scale smoke (marked perf): a 1k-device mobility cell with the full
+    sampling + BOCD + handover pipeline completes and drains."""
+    from dataclasses import replace
+    base = get_scenario("smoke-mobility")
+    spec = replace(
+        base,
+        topology=replace(base.topology, num_devices=1000, num_edges=10),
+        workload=replace(base.workload, rate_per_device_hz=0.05,
+                         horizon_s=10.0),
+        engine=replace(base.engine, retain_records=False))
+    sc = Simulation(spec).build()
+    m = sc.engine.run(sc.workload)
+    assert m.summary()["requests"] == len(sc.workload)
+    assert sc.engine.events_processed > 10000
+    for e in sc.topo.edges:
+        assert e.backlog() == 0 and e.tokens_owed == 0
+
+
+if HAVE_HYPOTHESIS:
+    def test_perf_property_suite_is_active():
+        assert True
+
+
+def test_sample_sweep_with_controller_but_no_engine_mobility():
+    """A pre-built HandoverController passed without mobility= must keep
+    working (the sweep falls back to the controller's own mobility model;
+    regression: the batched sweep used to dereference engine.mobility)."""
+    from repro.fleet.engine import FleetEngine
+    from repro.fleet.mobility import HandoverController
+    sc = _mobile_scenario()
+    eng = FleetEngine(sc.topo, sc.graph, sc.planner, router="jsq",
+                      handover=HandoverController(sc.mobility,
+                                                  policy="bocd"))
+    m = eng.run(sc.workload)
+    assert m.summary()["requests"] == len(sc.workload)
