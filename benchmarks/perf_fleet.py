@@ -149,15 +149,25 @@ def _count_events(engine, workload):
     return metrics, int(events), wall
 
 
-def run_cell(family: str, num_devices: int) -> dict:
+def run_cell(family: str, num_devices: int, *, profile: bool = False) -> dict:
+    """One benchmark cell.  ``profile=True`` attaches a
+    ``repro.obs.SimProfiler`` (per-event-kind wall time, heap peak, cache
+    hit rates) and adds its report as the cell's ``profile`` block — gate
+    runs stay observers-off so the measured path is the production one."""
     spec = perf_spec(family, num_devices)
     sim = Simulation(spec)
     t0 = time.perf_counter()
     sc = sim.build()
     build_s = time.perf_counter() - t0
+    profiler = None
+    if profile:
+        from repro.obs import SimProfiler
+        profiler = SimProfiler()
+        profiler.build_s = build_s
+        sc.engine.profiler = profiler
     metrics, events, wall = _count_events(sc.engine, sc.workload)
     s = metrics.summary()
-    return {
+    cell = {
         "devices": num_devices,
         "edges": spec.topology.num_edges,
         "requests": s["requests"],
@@ -168,6 +178,12 @@ def run_cell(family: str, num_devices: int) -> dict:
         "slo_attainment": s["slo_attainment"],
         "makespan_s": s["makespan_s"],
     }
+    counts = getattr(sc.engine, "event_counts", None)
+    if counts is not None:
+        cell["events_by_kind"] = dict(sorted(counts.items()))
+    if profiler is not None:
+        cell["profile"] = profiler.report(sc.engine)
+    return cell
 
 
 def _load() -> dict:
@@ -199,11 +215,21 @@ def main():
           f"{'events':>9} {'wall':>8} {'events/s':>10}")
     for family in args.families:
         for nd in sizes:
-            cell = run_cell(family, nd)
+            # --smoke doubles as the CI observability cell: profile on
+            # (per-kind wall time, cache hit rates); gate runs stay
+            # observers-off so the measured path is the production one
+            cell = run_cell(family, nd, profile=args.smoke)
             slot["cells"][f"{family}/{nd}"] = cell
             print(f"{family:>10} {nd:>8} {cell['edges']:>6} "
                   f"{cell['requests']:>9} {cell['events']:>9} "
                   f"{cell['wall_s']:>7.2f}s {cell['events_per_s']:>10.0f}")
+            prof = cell.get("profile")
+            if prof:
+                top = sorted(prof["events"].items(),
+                             key=lambda kv: -kv[1]["wall_s"])[:3]
+                hot = ", ".join(f"{k} {v['wall_pct']:.0f}%" for k, v in top)
+                print(f"{'profile':>10} {'':>8} wall={prof['wall_s']:.2f}s "
+                      f"peak_heap={prof['peak_heap']} [{hot}]")
     slot["recorded_unix"] = int(time.time())
     slot["calib_s"] = round(min(calibrate() for _ in range(3)), 4)
     with open(BENCH_PATH, "w") as f:

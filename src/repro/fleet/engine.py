@@ -29,6 +29,7 @@ without dropping or double-counting it.
 from __future__ import annotations
 
 import heapq
+import time
 from typing import List, Optional, Union
 
 import numpy as np
@@ -62,8 +63,19 @@ class FleetEngine:
                  mobility: Optional[MobilityModel] = None,
                  handover: Union[HandoverController, str, None] = None,
                  replan_max_coop: int = 1, max_coop: int = 3,
-                 retain_records: bool = True):
+                 retain_records: bool = True,
+                 tracer=None, timeline=None, profiler=None):
         self.topo = topo
+        # observability (repro.obs, docs/observability.md) — all optional,
+        # all read-only with respect to simulation state, so summaries are
+        # bit-identical with observers attached or not (tests/test_obs.py):
+        #   tracer   — repro.obs.trace.Tracer, fed at every lifecycle edge
+        #   timeline — repro.obs.timeline.Timeline, sampled on the sweep
+        #              grid (or dedicated "obs" events for static fleets)
+        #   profiler — repro.obs.profile.SimProfiler, wall time per event
+        self.tracer = tracer
+        self.timeline = timeline
+        self.profiler = profiler
         self.model, self.params = model, params
         self.dtype = dtype
         self.demote = demote_on_deadline
@@ -111,6 +123,11 @@ class FleetEngine:
         # engines sharing the stepper share the entries), keyed on exit,
         # assignment, and this topology's backbone bandwidth
         self._hop_cache = self.stepper.hop_cache
+        # run() resets these; initialized here so _enqueue/_dequeue work on
+        # an engine driven directly (tests exercise queue mechanics bare)
+        self.events_processed = 0
+        self.event_counts = {}
+        self.enqueued = self.tombstoned = 0
 
     # ---------------------------------------------------------------- run
     def run(self, workload: List[FleetRequest]) -> FleetMetrics:
@@ -150,29 +167,55 @@ class FleetEngine:
             req.handovers, req.migrated_bytes = 0, 0
             req.coop_counted = False
             evq.push(req.arrival_s, "arrival", req)
-        if self.handover is not None and self.handover.policy != "none":
+        sweeping = self.handover is not None and self.handover.policy != "none"
+        if sweeping:
             # one fleet-wide sampling sweep per slot: the sweep observes
             # every device in ascending id order — the exact pop order the
             # per-device events it batches had under the EventQueue's FIFO
             # tie-break (see repro.fleet.events)
             evq.push(self.handover.sample_dt, "sample", None)
+        if self.tracer is not None:
+            self.tracer.reset()            # reused engines: one run per file
+            self.tracer.annotate_fleet(self.topo)
+        if self.timeline is not None:
+            self.timeline.reset()
+            if not sweeping and workload:
+                # no sampling grid to piggyback on: schedule a dedicated
+                # snapshot grid.  "obs" events never mutate state, and the
+                # EventQueue's FIFO tie-break keeps the relative order of
+                # all other events unchanged — summaries stay bit-identical
+                # with the timeline attached (tests/test_obs.py)
+                evq.push(self.timeline.dt, "obs", None)
+        prof = self.profiler
+        if prof is not None:
+            prof.reset()
         self.events_processed = 0          # sweeps count once per device
+        self.event_counts = {}             # heap pops by event kind
+        self.enqueued = self.tombstoned = 0
         while evq:
             ev = evq.pop()
             self.events_processed += 1
-            if ev.kind == "arrival":
+            kind = ev.kind
+            self.event_counts[kind] = self.event_counts.get(kind, 0) + 1
+            if prof is not None:
+                t0 = time.perf_counter()
+            if kind == "arrival":
                 self._on_arrival(ev.payload, evq, metrics)
-            elif ev.kind == "round":
+            elif kind == "round":
                 self._on_round_done(ev.payload, evq, metrics)
-            elif ev.kind == "local_done":
+            elif kind == "local_done":
                 self._on_local_done(ev.payload, evq, metrics)
-            elif ev.kind == "transfer":
+            elif kind == "transfer":
                 src, dst, nbytes = ev.payload
                 metrics.add_transfer(src, dst, nbytes)
-            elif ev.kind == "sample":
+            elif kind == "sample":
                 self._on_sample_sweep(evq, metrics)
-            elif ev.kind == "handover":
+            elif kind == "handover":
                 self._on_handover(ev.payload, evq, metrics)
+            elif kind == "obs":
+                self._on_obs(evq)
+            if prof is not None:
+                prof.add(kind, time.perf_counter() - t0, len(evq))
         return metrics
 
     # ------------------------------------------------------------ bandwidth
@@ -190,6 +233,12 @@ class FleetEngine:
                     metrics: FleetMetrics):
         device = self.topo.devices[req.device]
         bw = device.link.bw_at(evq.now)
+        tr = self.tracer
+        if tr is not None:
+            # request-scoped async span: survives queue moves and handovers
+            tr.async_begin("request", req.rid, evq.now, tr.PID_DEVICES,
+                           req.device, args={"tenant": req.tenant,
+                                             "device": req.device})
         decision = self.router.decide(req, device, self.topo, evq.now)
         if decision is not None:
             # joint routing: (edge set, partition, exit) chosen together;
@@ -223,6 +272,14 @@ class FleetEngine:
                         self._run_local(req, device, bw_serve, evq)
                         return
         req.edge = edge.eid
+        if tr is not None:
+            tr.instant("plan", evq.now, tr.PID_DEVICES, req.device, args={
+                "rid": req.rid, "partition": req.plan.partition,
+                "exit": req.plan.exit_point, "edge": edge.eid,
+                "coop": list(req.assign.eids) if req.assign is not None
+                else [edge.eid]})
+            tr.async_begin("queue", req.rid, evq.now, tr.PID_DEVICES,
+                           req.device, args={"edge": edge.eid})
         self._enqueue(edge, req)
         edge.tokens_owed += req.max_new_tokens
         self._dev_inflight[req.device].append(req)
@@ -238,12 +295,14 @@ class FleetEngine:
         self._qentry[req] = entry
         heapq.heappush(edge.queue, entry)
         self._qseq += 1
+        self.enqueued += 1
 
     def _dequeue(self, edge: EdgeNode, req: FleetRequest):
         """Remove a queued request in O(1): tombstone its heap entry."""
         entry = self._qentry.pop(req)
         entry[2] = None
         edge.q_dead += 1
+        self.tombstoned += 1
 
     def _run_local(self, req: FleetRequest, device, bw: float,
                    evq: EventQueue):
@@ -262,6 +321,22 @@ class FleetEngine:
             req.deadline_s - start - prefill, per_exit, req.max_new_tokens,
             req.plan.exit_point) if self.demote else req.plan.exit_point
         total = per_exit[req.exit_point - 1] * req.max_new_tokens + prefill
+        tr = self.tracer
+        if tr is not None:
+            did = device.did
+            tr.instant("plan", now, tr.PID_DEVICES, did, args={
+                "rid": req.rid, "partition": 0,
+                "exit": req.plan.exit_point})
+            if start > now:
+                tr.complete("queue", now, start, tr.PID_DEVICES, did,
+                            args={"rid": req.rid})
+            if prefill > 0.0:
+                tr.complete("prefill", start, start + prefill,
+                            tr.PID_DEVICES, did, args={"rid": req.rid})
+            tr.complete("decode", start + prefill, start + total,
+                        tr.PID_DEVICES, did,
+                        args={"rid": req.rid, "exit": req.exit_point,
+                              "tokens": req.max_new_tokens})
         if self.model is not None:
             self._prefill_real(req)
             while req.tokens_done < req.max_new_tokens:
@@ -275,6 +350,14 @@ class FleetEngine:
                        metrics: FleetMetrics):
         now = evq.now
         self._pending -= 1
+        tr = self.tracer
+        if tr is not None:
+            met = now <= req.deadline_s
+            tr.instant("complete", now, tr.PID_DEVICES, req.device,
+                       args={"rid": req.rid, "met_slo": met,
+                             "exit": req.exit_point})
+            tr.async_end("request", req.rid, now, tr.PID_DEVICES,
+                         req.device, args={"met_slo": met})
         metrics.record(RequestRecord(
             rid=req.rid, tenant=req.tenant, device=req.device, edge=-1,
             arrival_s=req.arrival_s, finish_s=now,
@@ -295,6 +378,14 @@ class FleetEngine:
                 edge.completed += 1
                 self._pending -= 1
                 self._untrack(req)
+                if self.tracer is not None:
+                    tr = self.tracer
+                    met = now <= req.deadline_s
+                    tr.instant("complete", now, edge.eid, 0,
+                               args={"rid": req.rid, "met_slo": met,
+                                     "exit": req.exit_point})
+                    tr.async_end("request", req.rid, now, tr.PID_DEVICES,
+                                 req.device, args={"met_slo": met})
                 metrics.record(RequestRecord(
                     rid=req.rid, tenant=req.tenant, device=req.device,
                     edge=edge.eid, arrival_s=req.arrival_s, finish_s=now,
@@ -336,6 +427,9 @@ class FleetEngine:
                 edge.q_dead -= 1
                 continue
             del self._qentry[req]
+            if self.tracer is not None:
+                self.tracer.async_end("queue", req.rid, now,
+                                      self.tracer.PID_DEVICES, req.device)
             if req.admitted_s is None:
                 req.admitted_s = now
             if req.assign is not None and not req.coop_counted:
@@ -351,8 +445,9 @@ class FleetEngine:
             edge.active.append(req)
         if not edge.active:
             return
+        tr = self.tracer
         round_dt = 0.0
-        for req in edge.active:
+        for slot, req in enumerate(edge.active):
             device = self.topo.devices[req.device]
             bw = self._bw(device, edge.eid, now)
             if req.plan is None:
@@ -371,11 +466,16 @@ class FleetEngine:
             tokens_left = req.max_new_tokens - req.tokens_done
             # input payload ships once, then prompt_len/8 prefill steps —
             # billed at the plan exit, so the first round's exit choice must
-            # budget for it
-            prefill = self.stepper.input_time(req.plan.partition, bw) + \
-                per_exit[req.plan.exit_point - 1] * \
-                max(1, req.prompt_len // self.prefill_div) \
-                if req.prefill_pending else 0.0
+            # budget for it.  (t_up + t_pf is the identical float expression
+            # the single-line form computed; the split names the uplink and
+            # prefill sub-spans for the tracer.)
+            if req.prefill_pending:
+                t_up = self.stepper.input_time(req.plan.partition, bw)
+                t_pf = per_exit[req.plan.exit_point - 1] * \
+                    max(1, req.prompt_len // self.prefill_div)
+                prefill = t_up + t_pf
+            else:
+                t_up = t_pf = prefill = 0.0
             if self.demote:
                 req.exit_point = self.stepper.choose_exit(
                     req.deadline_s - now - prefill, per_exit, tokens_left,
@@ -384,6 +484,19 @@ class FleetEngine:
                 req.exit_point = req.plan.exit_point
             t_step = per_exit[req.exit_point - 1] + prefill
             req.prefill_pending = False
+            if tr is not None:
+                # slot tracks are 1-based (tid 0 is the rounds track)
+                tid = slot + 1
+                if t_up > 0.0:
+                    tr.complete("uplink", now, now + t_up, edge.eid, tid,
+                                args={"rid": req.rid})
+                if t_pf > 0.0:
+                    tr.complete("prefill", now + t_up, now + prefill,
+                                edge.eid, tid, args={"rid": req.rid})
+                tr.complete("decode", now + prefill, now + t_step,
+                            edge.eid, tid,
+                            args={"rid": req.rid, "exit": req.exit_point,
+                                  "token": req.tokens_done})
             if req.assign is not None and req.assign.k > 1:
                 self._emit_hops(req, now, evq, metrics)
             if self.model is not None:
@@ -394,6 +507,19 @@ class FleetEngine:
         edge.ema_round_s = round_dt if edge.ema_round_s == 0.0 else \
             0.8 * edge.ema_round_s + 0.2 * round_dt
         edge.round_inflight = True
+        if tr is not None:
+            eid = edge.eid
+            tr.complete("round", now, now + round_dt, eid, 0,
+                        args={"batch": len(edge.active)})
+            tr.counter("backlog_s", now, eid,
+                       {"backlog_s": edge.backlog_s()})
+            tr.counter("slots", now, eid,
+                       {"active": len(edge.active),
+                        "queued": len(edge.queue) - edge.q_dead})
+            tr.counter("tokens_owed", now, eid,
+                       {"tokens_owed": edge.tokens_owed})
+            tr.counter("coop_inflight", now, eid,
+                       {"coop_inflight": edge.coop_inflight})
         evq.push(now + round_dt, "round", edge)
 
     # ---------------------------------------------------------------- coop
@@ -407,6 +533,7 @@ class FleetEngine:
         key = (req.exit_point, req.assign, self.topo.edge_bw_bps)
         hit = self._hop_cache.get(key)
         if hit is None:
+            self.stepper.hop_misses += 1
             f_edge = self.stepper.planner.f_edge
             # a demoted exit's branch can be shorter than the planned
             # partition — hop/busy accounting must follow the clamped spans
@@ -419,9 +546,19 @@ class FleetEngine:
                              f_edge, self.topo.edge_bw_bps),
                 span_seconds(self.stepper.graph, req.exit_point, eff,
                              f_edge))
+        else:
+            self.stepper.hop_hits += 1
         eff, hops, spans = hit
         for dt, src, dst, nbytes in hops:
             evq.push(now + dt, "transfer", (src, dst, nbytes))
+        if self.tracer is not None:
+            tr, bb = self.tracer, self.topo.edge_bw_bps
+            for dt, src, dst, nbytes in hops:
+                # the wire time of the hop, ending at its completion offset
+                tr.complete("transfer", now + dt - nbytes / bb, now + dt,
+                            tr.PID_NET, src,
+                            args={"rid": req.rid, "src": src, "dst": dst,
+                                  "bytes": nbytes})
         # secondary compute is tracked apart from busy_s: the primary's
         # round_dt already covers the full chain, so adding spans to
         # edge_busy_s would double-bill utilization
@@ -480,9 +617,28 @@ class FleetEngine:
         if self.replanner is not None:
             for did in fired:
                 self._replan_device(did, evq, metrics)
+        if self.timeline is not None:
+            # piggyback the telemetry snapshot on the sweep this grid
+            # already runs: per-edge gauges post-replan, plus the device
+            # signals the sweep just computed (best-signal bandwidth and
+            # the BOCD run-length MAP when the bocd policy is active)
+            bank = self.handover.bank
+            self.timeline.snapshot(
+                now, self.topo, bw_row=bw.max(axis=1),
+                run_len=bank.map_run if bank is not None else None)
         self.events_processed += self.topo.num_devices - 1
         if self._pending > 0:
             evq.push(now + self.handover.sample_dt, "sample", None)
+
+    def _on_obs(self, evq: EventQueue):
+        """Dedicated timeline snapshot tick for fleets with no sampling
+        sweep to piggyback on (static topologies / policy "none").  Pure
+        observation: reads edge gauges, schedules only its own successor,
+        and self-terminates with the workload."""
+        now = evq.now
+        self.timeline.snapshot(now, self.topo)
+        if self._pending > 0:
+            evq.push(now + self.timeline.dt, "obs", None)
 
     def _replan_device(self, did: int, evq: EventQueue,
                        metrics: FleetMetrics):
@@ -540,6 +696,9 @@ class FleetEngine:
                 self._apply_decision(req, dec, acquire=False)
             return
         self._dequeue(edge, req)
+        if self.tracer is not None:
+            self.tracer.async_end("queue", req.rid, now,
+                                  self.tracer.PID_DEVICES, req.device)
         edge.tokens_owed -= req.max_new_tokens - req.tokens_done
         if dec.local:
             self._apply_decision(req, dec, acquire=False)
@@ -563,6 +722,17 @@ class FleetEngine:
         req.handovers += 1
         req.migrated_bytes += nbytes
         req.edge = dst
+        if self.tracer is not None:
+            tr = self.tracer
+            args = {"rid": req.rid, "src": src_eid, "dst": dst,
+                    "bytes": nbytes}
+            tr.async_begin("handover", req.rid, now, tr.PID_DEVICES,
+                           req.device, args=args)
+            # the state snapshot on the backbone wire is a transfer span
+            # like any coop hop; the handover *stage* (snapshot -> resume)
+            # is the async pair above
+            tr.complete("transfer", now, now + dt, tr.PID_NET, src_eid,
+                        args=args)
         metrics.add_handover(src_eid, dst, nbytes, now + dt)
         if nbytes > 0:
             evq.push(now + dt, "transfer", (src_eid, dst, nbytes))
@@ -575,6 +745,12 @@ class FleetEngine:
         exactly-once completion is preserved (tests/test_fleet_invariants)."""
         edge = self.topo.edges[req.edge]
         req.migrating = False
+        if self.tracer is not None:
+            tr = self.tracer
+            tr.async_end("handover", req.rid, evq.now, tr.PID_DEVICES,
+                         req.device)
+            tr.async_begin("queue", req.rid, evq.now, tr.PID_DEVICES,
+                           req.device, args={"edge": edge.eid})
         self._enqueue(edge, req)
         edge.tokens_owed += req.max_new_tokens - req.tokens_done
         if not edge.round_inflight:

@@ -65,6 +65,9 @@ class JointPlanner:
         # fixed — precompute them once as flat arrays and score arrivals
         # with elementwise numpy (see _score_tables)
         self._score_cache = {}
+        # hit/miss counters for cache_stats() (repro.obs self-profiling)
+        self.score_hits = self.score_misses = 0
+        self.ordered_hits = self.ordered_misses = 0
 
     # ------------------------------------------------------------ candidates
     def _candidate_sets(self, topo: FleetTopology) -> List[Tuple[EdgeNode, ...]]:
@@ -96,7 +99,9 @@ class JointPlanner:
         arrival."""
         hit = self._ordered_sets_cache.get(order)
         if hit is not None:
+            self.ordered_hits += 1
             return hit
+        self.ordered_misses += 1
         edges = {e.eid: e for e in self.topo.edges}
         out: List[Tuple[EdgeNode, ...]] = [()]
         seen = set()
@@ -115,6 +120,21 @@ class JointPlanner:
         self._ordered_sets_cache[order] = out
         return out
 
+    def cache_stats(self) -> dict:
+        """Hit/miss/size per memo (score tables, ordered candidate sets) —
+        surfaced by ``repro.obs.SimProfiler.report`` under
+        ``replanner_caches`` when the engine's replanner is a JointPlanner."""
+        def block(hits: int, misses: int, entries: int) -> dict:
+            total = hits + misses
+            return {"hits": hits, "misses": misses, "entries": entries,
+                    "hit_rate": round(hits / total, 6) if total else None}
+        return {
+            "score": block(self.score_hits, self.score_misses,
+                           len(self._score_cache)),
+            "ordered_sets": block(self.ordered_hits, self.ordered_misses,
+                                  len(self._ordered_sets_cache)),
+        }
+
     # ------------------------------------------------------------ decision
     def _score_tables(self, bw: float, device: DeviceNode,
                       topo: FleetTopology) -> dict:
@@ -127,7 +147,9 @@ class JointPlanner:
         key = (quantize_bw(bw), device.slowdown)
         hit = self._score_cache.get(key)
         if hit is not None:
+            self.score_hits += 1
             return hit
+        self.score_misses += 1
         plans, assigns, accs, t_exit, t_min = [], [], [], [], []
         is_local, primaries, sec = [], [], []
         for cand in self._sets:

@@ -5,9 +5,11 @@ two runs with the same seed produce bit-identical summaries (the determinism
 contract the tests assert).
 
 :meth:`FleetMetrics.summary` is a pure function of *running aggregates*
-maintained by :meth:`record`: counters, histograms, per-edge dicts, and two
-compact float buffers (latency and queue delay — exact percentiles and the
-``np.mean`` pairwise sum need the raw samples, ~16 bytes per request).
+maintained by :meth:`record` — named :class:`~repro.obs.registry
+.MetricsRegistry` instruments (counters, counter families, and two
+sample-retaining histograms: latency and queue delay, whose exact
+percentiles and ``np.mean`` pairwise sum need the raw samples, ~16 bytes
+per request) plus the public per-edge dicts.
 The per-request :class:`RequestRecord` objects and the ``handover_log`` are
 *retention*, not inputs: with ``retain_records=False`` (the 10k-device /
 sweep setting) neither is kept and memory stays O(edges) + the two float
@@ -20,7 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
-import numpy as np
+from repro.obs.registry import MetricsRegistry
 
 
 @dataclass
@@ -64,41 +66,45 @@ class FleetMetrics:
     handover_log: List[tuple] = field(default_factory=list)
 
     def __post_init__(self):
-        # ---- running aggregates (the only inputs summary() reads) ----
-        self._lat: List[float] = []        # per-request latency (percentiles)
-        self._qd: List[float] = []         # per-request queue delay (mean)
-        self._n = 0
-        self._met = 0                      # requests that met their SLO
-        self._coop = 0                     # cooperative (multi-edge) requests
-        self._moved_n = 0                  # requests with >= 1 handover ...
-        self._moved_met = 0                # ... and how many met their SLO
-        self._exits: Dict[int, int] = {}
-        self._parts: Dict[int, int] = {}
-        self._tenant_n: Dict[str, int] = {}
-        self._tenant_met: Dict[str, int] = {}
-        self._handover_count = 0
-        self._migrated_bytes = 0
+        # ---- running aggregates (the only inputs summary() reads), all
+        # registered repro.obs instruments: the counters/histograms are the
+        # same plain ints and float lists the pre-registry fields held, so
+        # summary() arithmetic is unchanged bitwise — but they now share
+        # one named, snapshottable registry instead of ad-hoc privates
+        r = self.registry = MetricsRegistry()
+        self._lat = r.histogram("latency_s")    # percentiles need samples
+        self._qd = r.histogram("queue_delay_s")
+        self._n = r.counter("requests")
+        self._met = r.counter("requests_met_slo")
+        self._coop = r.counter("coop_requests")
+        self._moved_n = r.counter("moved_requests")      # >= 1 handover ...
+        self._moved_met = r.counter("moved_requests_met_slo")  # ... met SLO
+        self._exits = r.family("exit_histogram")
+        self._parts = r.family("partition_histogram")
+        self._tenant_n = r.family("tenant_requests")
+        self._tenant_met = r.family("tenant_requests_met_slo")
+        self._handovers = r.counter("handovers")
+        self._migrated = r.counter("migrated_bytes")
 
     def record(self, rec: RequestRecord):
         """Fold one completed request into the running aggregates (and
         retain the record itself when ``retain_records``)."""
-        self._n += 1
-        self._lat.append(rec.latency_s)
-        self._qd.append(rec.queue_delay_s)
+        self._n.inc()
+        self._lat.observe(rec.latency_s)
+        self._qd.observe(rec.queue_delay_s)
         if rec.met_slo:
-            self._met += 1
+            self._met.inc()
         if len(rec.edges) > 1:
-            self._coop += 1
+            self._coop.inc()
         if rec.handovers > 0:
-            self._moved_n += 1
+            self._moved_n.inc()
             if rec.met_slo:
-                self._moved_met += 1
-        self._exits[rec.exit_point] = self._exits.get(rec.exit_point, 0) + 1
-        self._parts[rec.partition] = self._parts.get(rec.partition, 0) + 1
-        self._tenant_n[rec.tenant] = self._tenant_n.get(rec.tenant, 0) + 1
+                self._moved_met.inc()
+        self._exits.inc(rec.exit_point)
+        self._parts.inc(rec.partition)
+        self._tenant_n.inc(rec.tenant)
         if rec.met_slo:
-            self._tenant_met[rec.tenant] = \
-                self._tenant_met.get(rec.tenant, 0) + 1
+            self._tenant_met.inc(rec.tenant)
         self.horizon_s = max(self.horizon_s, rec.finish_s)
         if self.retain_records:
             self.records.append(rec)
@@ -120,53 +126,58 @@ class FleetMetrics:
 
     def add_handover(self, src: int, dst: int, nbytes: int, t_s: float):
         """Log one mid-request migration completing at virtual time t_s."""
-        self._handover_count += 1
-        self._migrated_bytes += nbytes
+        self._handovers.inc()
+        self._migrated.inc(nbytes)
         if self.retain_records:
             self.handover_log.append((round(t_s, 9), src, dst, nbytes))
 
     @property
     def handover_count(self) -> int:
-        return self._handover_count
+        return self._handovers.value
 
     @property
     def migrated_bytes_total(self) -> int:
-        return self._migrated_bytes
+        return self._migrated.value
 
     # ------------------------------------------------------------ summaries
     def summary(self) -> Dict:
         """Aggregate into one flat dict.  Pure function of the streaming
         aggregates — same seed, same summary, bitwise, with or without
         record retention (the determinism contract the tests and benchmarks
-        assert)."""
-        if self._n == 0:
-            return {"requests": 0, "slo_attainment": 0.0}
-        lat = np.array(self._lat)
-        qd = np.array(self._qd)
+        assert).
+
+        Schema-complete at every request count: with zero completed requests
+        the same keys come back with zero/empty values and ``None`` for the
+        undefined statistics (percentiles, mean queue delay, handover SLO),
+        so consumers indexing e.g. ``p95_latency_s`` on an empty sweep cell
+        never KeyError.  Non-request aggregates (handovers, backbone bytes,
+        cooperative busy time, edge utilization) still report whatever was
+        actually observed."""
+        n = self._n.value
         horizon = max(self.horizon_s, 1e-9)
         util = {eid: round(self.edge_busy_s.get(eid, 0.0) / horizon, 6)
                 for eid in range(self.num_edges)}
         return {
-            "requests": self._n,
-            "coop_requests": self._coop,
-            "handovers": self._handover_count,
-            "migrated_mb": round(self._migrated_bytes / 1e6, 6),
+            "requests": n,
+            "coop_requests": self._coop.value,
+            "handovers": self._handovers.value,
+            "migrated_mb": round(self._migrated.value / 1e6, 6),
             # SLO attainment restricted to requests that migrated at least
             # once — how well handed-over requests still land their deadline
-            "handover_slo": (self._moved_met / self._moved_n
-                             if self._moved_n else None),
+            "handover_slo": (self._moved_met.value / self._moved_n.value
+                             if self._moved_n.value else None),
             "backbone_mb": round(sum(self.transfer_bytes.values()) / 1e6, 6),
             "coop_busy_s": {eid: round(v, 6)
                             for eid, v in sorted(self.coop_busy_s.items())},
-            "slo_attainment": self._met / self._n,
-            "p50_latency_s": float(np.percentile(lat, 50)),
-            "p95_latency_s": float(np.percentile(lat, 95)),
-            "p99_latency_s": float(np.percentile(lat, 99)),
-            "mean_queue_delay_s": float(np.mean(qd)),
+            "slo_attainment": self._met.value / n if n else 0.0,
+            "p50_latency_s": self._lat.percentile(50),
+            "p95_latency_s": self._lat.percentile(95),
+            "p99_latency_s": self._lat.percentile(99),
+            "mean_queue_delay_s": self._qd.mean(),
             "makespan_s": float(self.horizon_s),
             "edge_utilization": util,
-            "slo_by_tenant": {t: self._tenant_met.get(t, 0) / n
-                              for t, n in sorted(self._tenant_n.items())},
-            "exit_histogram": dict(sorted(self._exits.items())),
-            "partition_histogram": dict(sorted(self._parts.items())),
+            "slo_by_tenant": {t: self._tenant_met.get(t, 0) / c
+                              for t, c in sorted(self._tenant_n.items())},
+            "exit_histogram": self._exits.as_dict(),
+            "partition_histogram": self._parts.as_dict(),
         }

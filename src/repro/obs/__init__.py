@@ -1,0 +1,30 @@
+"""Fleet-wide observability (docs/observability.md).
+
+Three pillars, all zero-overhead when unattached and determinism-preserving
+when attached (summaries bit-identical with observers on or off):
+
+* :mod:`repro.obs.trace` — request-span tracing to Chrome/Perfetto
+  trace-event JSON (``EngineSpec(trace=...)`` / ``repro.sim --trace``);
+* :mod:`repro.obs.timeline` — columnar per-edge/per-device telemetry
+  timelines (``EngineSpec(timeline=...)``), plus the
+  :class:`~repro.obs.registry.MetricsRegistry` instrument layer that
+  :class:`~repro.fleet.metrics.FleetMetrics` aggregates through;
+* :mod:`repro.obs.profile` — simulator self-profiling (wall time per event
+  kind, cache hit rates, tombstone ratio) surfaced by
+  ``benchmarks/perf_fleet.py --smoke``.
+
+``python -m repro.obs report FILE`` renders either artifact as a terminal
+dashboard; ``python -m repro.obs validate FILE`` is the CI trace check.
+"""
+from repro.obs.profile import SimProfiler
+from repro.obs.registry import (Counter, CounterFamily, Gauge, Histogram,
+                                MetricsRegistry)
+from repro.obs.timeline import (DEVICE_SIGNALS, EDGE_GAUGES, Timeline,
+                                load_timeline)
+from repro.obs.trace import Tracer, load_trace, validate_trace
+
+__all__ = [
+    "Counter", "CounterFamily", "DEVICE_SIGNALS", "EDGE_GAUGES", "Gauge",
+    "Histogram", "MetricsRegistry", "SimProfiler", "Timeline", "Tracer",
+    "load_timeline", "load_trace", "validate_trace",
+]

@@ -1,0 +1,7 @@
+"""Entry point: ``python -m repro.obs report|validate FILE``."""
+import sys
+
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -105,6 +105,12 @@ class CoInferenceStepper:
         # lives on the stepper so every engine sharing it (the whole fleet)
         # shares one memo — see FleetEngine._emit_hops
         self.hop_cache: Dict[tuple, object] = {}
+        # cumulative hit/miss counters per cache (repro.obs self-profiling;
+        # plain ints — the lookups sit under every fleet round).  hop_*
+        # is maintained by FleetEngine._emit_hops, whose cache this is.
+        self.plan_hits = self.plan_misses = 0
+        self.step_hits = self.step_misses = 0
+        self.hop_hits = self.hop_misses = 0
         self._decode_jit: Dict[Optional[int], object] = {}
         self.n_graph = graph.num_exits
         self.n_model = model.num_segments if model is not None else graph.num_exits
@@ -121,7 +127,10 @@ class CoInferenceStepper:
         key = (quantize_bw(bw_bps), ())
         plan = self.plan_cache.get(key)
         if plan is None:
+            self.plan_misses += 1
             plan = self.plan_cache[key] = self.planner.plan(bw_bps)
+        else:
+            self.plan_hits += 1
         return plan
 
     def plan_multi(self, bw_bps: float, edge_speeds: tuple, *,
@@ -137,9 +146,12 @@ class CoInferenceStepper:
                round(device_load, 3), edge_bw_bps)
         plan = self.plan_cache.get(key)
         if plan is None:
+            self.plan_misses += 1
             plan = self.plan_cache[key] = self.planner.plan_multi(
                 bw_bps, edge_speeds, device_load=device_load,
                 edge_bw_bps=edge_bw_bps)
+        else:
+            self.plan_hits += 1
         return plan
 
     # ------------------------------------------------------------ timing
@@ -212,9 +224,12 @@ class CoInferenceStepper:
         key = (partition, qbw, edge_load, device_load, include_input)
         hit = self._step_cache.get(key)
         if hit is None:
+            self.step_misses += 1
             hit = self._step_cache[key] = self.per_exit_times(
                 partition, qbw, edge_load=edge_load,
                 device_load=device_load, include_input=include_input)
+        else:
+            self.step_hits += 1
         return hit
 
     def per_exit_times_coop_cached(self, partition: int, edge_speeds: tuple,
@@ -237,7 +252,9 @@ class CoInferenceStepper:
                include_input)
         hit = self._step_cache.get(key)
         if hit is not None:
+            self.step_hits += 1
             return hit
+        self.step_misses += 1
         out = []
         for e in self.exit_points:
             p_e = min(partition, len(self.graph.branches[e - 1]))
@@ -259,6 +276,24 @@ class CoInferenceStepper:
                     tokens_left: int, preferred: int) -> int:
         """Deadline demotion (``pick_exit``) against the remaining budget."""
         return pick_exit(remaining_s, per_exit, tokens_left, preferred)
+
+    def cache_stats(self) -> Dict[str, Dict]:
+        """Hit/miss/size per memo (plan search, per-exit step times, coop
+        hop schedules) — cumulative over the stepper's lifetime, which is
+        fleet-wide and cross-run for a shared stepper.  Surfaced by
+        ``repro.obs.SimProfiler.report`` and ``perf_fleet.py --smoke``."""
+        def block(hits: int, misses: int, entries: int) -> Dict:
+            total = hits + misses
+            return {"hits": hits, "misses": misses, "entries": entries,
+                    "hit_rate": round(hits / total, 6) if total else None}
+        return {
+            "plan": block(self.plan_hits, self.plan_misses,
+                          len(self.plan_cache)),
+            "step": block(self.step_hits, self.step_misses,
+                          len(self._step_cache)),
+            "hop": block(self.hop_hits, self.hop_misses,
+                         len(self.hop_cache)),
+        }
 
     # ------------------------------------------------------------ decode path
     def to_model_exit(self, graph_exit: int) -> int:

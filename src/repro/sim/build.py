@@ -130,10 +130,14 @@ class Simulation:
             spec = get_scenario(spec)
         self.spec = spec
         self.scenario: Optional[Scenario] = None
+        self.build_s: Optional[float] = None  # wall time of build(); feeds
+        #                                       SimProfiler.build_s
 
     def build(self) -> Scenario:
         if self.scenario is not None:
             return self.scenario
+        import time
+        t_build0 = time.perf_counter()
         spec = self.spec
         seeds = spec.seeds()
         sc = build_stack(spec.planner, with_model=spec.engine.real_decode,
@@ -175,6 +179,15 @@ class Simulation:
                     f"unknown engine dtype {spec.engine.dtype!r}: expected "
                     "a jax.numpy dtype name such as 'float32' or "
                     "'bfloat16'") from None
+        tracer = timeline = None
+        if spec.engine.trace is not None:
+            from repro.obs.trace import Tracer
+            tracer = Tracer()
+        if spec.engine.timeline is not None:
+            from repro.obs.timeline import Timeline
+            timeline = Timeline(topo.num_edges,
+                                num_devices=topo.num_devices,
+                                dt=spec.engine.timeline_dt)
         engine = FleetEngine(
             topo, sc.graph, sc.planner, router=spec.router.name,
             model=sc.model, params=sc.params, dynamic=spec.engine.dynamic,
@@ -182,12 +195,21 @@ class Simulation:
             prefill_div=spec.engine.prefill_div, mobility=mobility,
             handover=handover, replan_max_coop=spec.engine.replan_max_coop,
             max_coop=spec.router.max_coop,
-            retain_records=spec.engine.retain_records)
+            retain_records=spec.engine.retain_records,
+            tracer=tracer, timeline=timeline)
         sc.topo, sc.mobility, sc.handover = topo, mobility, handover
         sc.workload, sc.engine = workload, engine
+        self.build_s = time.perf_counter() - t_build0
         self.scenario = sc
         return sc
 
     def run(self) -> FleetMetrics:
         sc = self.build()
-        return sc.engine.run(sc.workload)
+        metrics = sc.engine.run(sc.workload)
+        # observers are read-only: saving artifacts after the run cannot
+        # perturb the metrics above
+        if sc.engine.tracer is not None and self.spec.engine.trace:
+            sc.engine.tracer.save(self.spec.engine.trace)
+        if sc.engine.timeline is not None and self.spec.engine.timeline:
+            sc.engine.timeline.to_jsonl(self.spec.engine.timeline)
+        return metrics

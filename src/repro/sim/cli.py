@@ -6,12 +6,16 @@
     python -m repro.sim --scenario smoke-lm --set router.name=joint \\
                         --set topology.num_devices=100
     python -m repro.sim --spec my_scenario.json --json
+    python -m repro.sim --scenario smoke-mobility --trace trace.json
 
 ``--set key=value`` takes dotted spec paths (values parsed as JSON, falling
 back to bare strings), so a sweep is a shell loop over spec edits — no
 bespoke argparse per experiment.  ``--json`` emits ``{scenario, spec,
-metrics}`` on stdout for CI artifacts and downstream tooling; the default
-output is a human-readable metrics listing.
+metrics, events}`` on stdout for CI artifacts and downstream tooling; the
+default output is a human-readable metrics listing.  ``--trace`` /
+``--timeline`` attach the ``repro.obs`` observers and write their artifacts
+after the run (summaries are bit-identical either way —
+docs/observability.md).
 """
 from __future__ import annotations
 
@@ -66,7 +70,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     ap.add_argument("--json", action="store_true",
-                    help="emit {scenario, spec, metrics} as JSON")
+                    help="emit {scenario, spec, metrics, events} as JSON")
+    ap.add_argument("--trace", metavar="FILE",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "run (view: ui.perfetto.dev, or `python -m "
+                         "repro.obs report FILE`)")
+    ap.add_argument("--timeline", metavar="FILE",
+                    help="write the per-edge gauge timeline as JSONL "
+                         "(render: `python -m repro.obs report FILE`)")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -76,13 +87,24 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     spec = _resolve_spec(args)
     overrides = _parse_overrides(args.overrides)
+    if args.trace:
+        overrides["engine.trace"] = args.trace
+    if args.timeline:
+        overrides["engine.timeline"] = args.timeline
     if overrides:
         spec = apply_overrides(spec, overrides)
 
-    metrics = Simulation(spec).run().summary()
+    sim = Simulation(spec)
+    metrics = sim.run().summary()
+    engine = sim.scenario.engine
+    # events_processed lives OUTSIDE summary(): observers add "obs" events,
+    # so it may differ observers-on vs off while summaries stay identical
+    events = {"processed": engine.events_processed,
+              "by_kind": dict(sorted(engine.event_counts.items()))}
     if args.json:
         print(json.dumps({"scenario": spec.name, "spec": spec.to_dict(),
-                          "metrics": metrics}, indent=2, default=float))
+                          "metrics": metrics, "events": events},
+                         indent=2, default=float))
         return 0
     topo = spec.topology
     print(f"scenario {spec.name!r}: {topo.num_devices} devices x "
@@ -90,4 +112,10 @@ def main(argv: Optional[List[str]] = None) -> int:
           f"seed={spec.seed}")
     for key, value in metrics.items():
         print(f"  {key:>20}: {value}")
+    kinds = ", ".join(f"{k}={v}" for k, v in sorted(events["by_kind"].items()))
+    print(f"  {'events':>20}: {events['processed']} ({kinds})")
+    if args.trace:
+        print(f"  {'trace':>20}: {args.trace}")
+    if args.timeline:
+        print(f"  {'timeline':>20}: {args.timeline}")
     return 0

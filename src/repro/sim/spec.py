@@ -212,7 +212,14 @@ class EngineSpec(_Spec):
     ``'float32'``, ``'bfloat16'``).  ``retain_records=False`` keeps
     FleetMetrics to its running aggregates (identical summaries, no
     per-request record/handover-log retention) — the 10k-device / sweep
-    setting (docs/performance.md)."""
+    setting (docs/performance.md).
+
+    Observability (docs/observability.md): ``trace`` writes a
+    Chrome/Perfetto trace-event JSON of every request's lifecycle spans to
+    that path after the run; ``timeline`` writes the columnar per-edge
+    gauge timeline as JSONL, sampled every ``timeline_dt`` virtual
+    seconds.  Both are read-only observers — summaries stay bit-identical
+    with them on or off."""
     real_decode: bool = False
     dtype: Optional[str] = None
     dynamic: bool = False
@@ -220,6 +227,9 @@ class EngineSpec(_Spec):
     prefill_div: int = 8
     replan_max_coop: int = 1
     retain_records: bool = True
+    trace: Optional[str] = None
+    timeline: Optional[str] = None
+    timeline_dt: float = 0.5
 
 
 @dataclass

@@ -67,15 +67,22 @@ def random_cells(base: ScenarioSpec, axes: Dict[str, Sequence], n: int, *,
 
 
 def run_cell(spec: ScenarioSpec) -> Dict:
-    """Execute one cell; the JSONL row dict (``wall_s`` is measurement
-    metadata — ``metrics`` is a pure function of ``spec``).  Module-level so
-    worker processes can unpickle it."""
+    """Execute one cell; the JSONL row dict (``wall_s`` and ``events`` are
+    measurement metadata — ``metrics`` is a pure function of ``spec``).
+    ``engine.trace`` / ``engine.timeline`` are ordinary spec paths, so a
+    sweep axis (or ``--set``) can attach the ``repro.obs`` observers to any
+    cell without changing its metrics.  Module-level so worker processes
+    can unpickle it."""
     import time
 
     from repro.sim.build import Simulation
     t0 = time.perf_counter()
-    metrics = Simulation(spec).run().summary()
+    sim = Simulation(spec)
+    metrics = sim.run().summary()
+    engine = sim.scenario.engine
     return {"spec": spec.to_dict(), "metrics": metrics,
+            "events": {"processed": engine.events_processed,
+                       "by_kind": dict(sorted(engine.event_counts.items()))},
             "wall_s": round(time.perf_counter() - t0, 3)}
 
 

@@ -232,8 +232,12 @@ def test_mobility_rerun_determinism(policy):
         router=RouterSpec(name="nearest"),
         mobility=MobilitySpec(policy=policy))).build()
     a = sc.engine.run(sc.workload).summary()
+    events_a = (sc.engine.events_processed, dict(sc.engine.event_counts))
     b = sc.engine.run(sc.workload).summary()
+    events_b = (sc.engine.events_processed, dict(sc.engine.event_counts))
     assert a == b
+    # the event stream itself is deterministic, not just its outcome
+    assert events_a == events_b
 
 
 @pytest.mark.parametrize("spec", [
@@ -275,8 +279,12 @@ def test_rerun_determinism_all_routers(router):
         topology=TopologySpec(num_devices=8, num_edges=2),
         workload=WorkloadSpec(rate_hz=10.0, horizon_s=6.0),
         router=RouterSpec(name=router))).build()
-    assert sc.engine.run(sc.workload).summary() == \
-        sc.engine.run(sc.workload).summary()
+    a = sc.engine.run(sc.workload).summary()
+    events_a = (sc.engine.events_processed, dict(sc.engine.event_counts))
+    b = sc.engine.run(sc.workload).summary()
+    events_b = (sc.engine.events_processed, dict(sc.engine.event_counts))
+    assert a == b
+    assert events_a == events_b
 
 
 @settings(max_examples=12, deadline=None)

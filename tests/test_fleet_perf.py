@@ -170,7 +170,33 @@ def _replay_summary(m: FleetMetrics) -> dict:
     """The pre-streaming FleetMetrics.summary, recomputed from retained
     records — the oracle the running aggregates must match bitwise."""
     if not m.records:
-        return {"requests": 0, "slo_attainment": 0.0}
+        # schema-complete empty summary (ISSUE 6 satellite): same keys as
+        # the populated path, None for undefined statistics, and the
+        # non-request aggregates reported from what was actually observed
+        horizon = max(m.horizon_s, 1e-9)
+        return {
+            "requests": 0,
+            "coop_requests": 0,
+            "handovers": len(m.handover_log),
+            "migrated_mb": round(
+                sum(h[3] for h in m.handover_log) / 1e6, 6),
+            "handover_slo": None,
+            "backbone_mb": round(sum(m.transfer_bytes.values()) / 1e6, 6),
+            "coop_busy_s": {eid: round(v, 6)
+                            for eid, v in sorted(m.coop_busy_s.items())},
+            "slo_attainment": 0.0,
+            "p50_latency_s": None,
+            "p95_latency_s": None,
+            "p99_latency_s": None,
+            "mean_queue_delay_s": None,
+            "makespan_s": float(m.horizon_s),
+            "edge_utilization": {
+                eid: round(m.edge_busy_s.get(eid, 0.0) / horizon, 6)
+                for eid in range(m.num_edges)},
+            "slo_by_tenant": {},
+            "exit_histogram": {},
+            "partition_histogram": {},
+        }
     lat = np.array([r.latency_s for r in m.records])
     met = np.array([r.met_slo for r in m.records])
     qd = np.array([r.queue_delay_s for r in m.records])
