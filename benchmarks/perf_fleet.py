@@ -5,13 +5,17 @@ Two cell families, both scaled from the registered smoke scenarios
 benchmarks and tests run:
 
 * ``static``   — the ``smoke-lm`` fleet (diurnal arrivals, bandwidth-aware
-  routing) at {100, 1k, 10k} devices.
+  routing) at {100, 1k, 10k, 100k} devices.
 * ``mobility`` — a ``smoke-mobility``-derived cell (random-waypoint motion,
   streaming tenants, nearest routing, BOCD handover) at the same sizes: the
   sampling + change-point + replan hot path.
 
 Edges scale with the fleet (``max(4, devices // 100)``) so cells stay in the
-serving regime rather than collapsing into one overload queue.
+serving regime rather than collapsing into one overload queue.  Cells at
+>= 10k devices run geography-sharded (``repro.sim.shard``, ~500 devices
+per tile): tile-scoped routing and sampling cut the per-event edge-scan
+cost, and tiles fan out over worker processes where cores exist
+(``--processes``; the recorded figures here are single-process).
 
 An *event* is one unit of simulator work: one event-heap pop, where a
 fleet-wide ``sample`` sweep counts once per device it observes (the engine
@@ -26,7 +30,10 @@ Results merge into ``BENCH_fleet.json`` at the repo root:
     python benchmarks/perf_fleet.py --smoke             # 100-device CI cell
 
 ``current`` runs print and gate the speedup against the recorded baseline
-(acceptance: >= 10x events/sec at 1k devices on the mobility family).
+(acceptance: >= 10x events/sec at 1k devices on the mobility family).  A
+gate whose family/size cell is missing from either recording fails loudly
+(exit 2) — a silent gate-pass on a missing cell is a measurement bug, not
+a success.
 """
 from __future__ import annotations
 
@@ -41,9 +48,14 @@ from repro.sim import Simulation, get_scenario
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_PATH = REPO_ROOT / "BENCH_fleet.json"
 
-SIZES = (100, 1000, 10000)
+SIZES = (100, 1000, 10000, 100000)
 FAMILIES = ("static", "mobility")
 GATE_FAMILY, GATE_SIZE, GATE_SPEEDUP = "mobility", 1000, 10.0
+# devices per geography tile for sharded cells (>= SHARD_MIN_DEVICES)
+SHARD_TILE_DEVICES = 500
+SHARD_MIN_DEVICES = 10000
+# the CI --smoke sharded cell: 100k devices, the cheaper (mobility) family
+SMOKE_100K = ("mobility", 100000)
 
 
 def calibrate() -> float:
@@ -76,25 +88,41 @@ def _no_records(engine_spec):
         return engine_spec
 
 
+def cell_shards(num_devices: int) -> int:
+    """Geography tiles for one cell: ~``SHARD_TILE_DEVICES`` devices per
+    tile at >= ``SHARD_MIN_DEVICES`` devices (1 = unsharded).  The tile
+    count must divide devices and edges; sizes that don't split evenly
+    stay unsharded."""
+    if num_devices < SHARD_MIN_DEVICES:
+        return 1
+    k = num_devices // SHARD_TILE_DEVICES
+    num_edges = max(4, num_devices // 100)
+    while k > 1 and (num_devices % k or num_edges % k):
+        k -= 1
+    return k
+
+
 def perf_spec(family: str, num_devices: int):
     """The benchmark cell at one fleet size: the registered smoke scenario
-    rescaled (devices, proportional edges; the mobility family also shortens
-    the workload so 10k devices stay within CI budgets).  Record retention
-    is off — summaries are bit-identical either way (pinned in
-    tests/test_fleet_perf.py) and memory stays flat at 10k devices."""
+    rescaled (devices, proportional edges, geography shards at >= 10k
+    devices; the mobility family also shortens the workload so big cells
+    stay within CI budgets).  Record retention is off — summaries are
+    bit-identical either way (pinned in tests/test_fleet_perf.py) and
+    memory stays flat at 10k+ devices."""
     num_edges = max(4, num_devices // 100)
+    shards = cell_shards(num_devices)
     if family == "static":
         base = get_scenario("smoke-lm")
         return replace(
             base, name=f"perf-static-{num_devices}",
             topology=replace(base.topology, num_devices=num_devices,
-                             num_edges=num_edges),
+                             num_edges=num_edges, shards=shards),
             engine=_no_records(base.engine))
     base = get_scenario("smoke-mobility")
     return replace(
         base, name=f"perf-mobility-{num_devices}",
         topology=replace(base.topology, num_devices=num_devices,
-                         num_edges=num_edges),
+                         num_edges=num_edges, shards=shards),
         workload=replace(base.workload, rate_per_device_hz=0.1,
                          horizon_s=20.0),
         engine=_no_records(base.engine))
@@ -149,12 +177,39 @@ def _count_events(engine, workload):
     return metrics, int(events), wall
 
 
-def run_cell(family: str, num_devices: int, *, profile: bool = False) -> dict:
+def run_cell(family: str, num_devices: int, *, profile: bool = False,
+             processes: int = 1) -> dict:
     """One benchmark cell.  ``profile=True`` attaches a
     ``repro.obs.SimProfiler`` (per-event-kind wall time, heap peak, cache
     hit rates) and adds its report as the cell's ``profile`` block — gate
-    runs stay observers-off so the measured path is the production one."""
+    runs stay observers-off so the measured path is the production one.
+    Sharded cells (>= 10k devices) run tile-by-tile — across ``processes``
+    workers when > 1 — and report the merged metrics; their ``wall_s``
+    includes the per-tile builds (there is no separate build phase)."""
     spec = perf_spec(family, num_devices)
+    if spec.topology.shards > 1:
+        from repro.sim.shard import run_sharded_info
+        t0 = time.perf_counter()
+        metrics, info = run_sharded_info(
+            spec, processes=processes if processes > 1 else None)
+        wall = time.perf_counter() - t0
+        s = metrics.summary()
+        return {
+            "devices": num_devices,
+            "edges": spec.topology.num_edges,
+            "shards": spec.topology.shards,
+            "processes": max(processes, 1),
+            "requests": s["requests"],
+            "events": info["events_processed"],
+            "build_s": 0.0,
+            "wall_s": round(wall, 3),
+            "events_per_s": round(info["events_processed"]
+                                  / max(wall, 1e-9), 1),
+            "slo_attainment": s["slo_attainment"],
+            "makespan_s": s["makespan_s"],
+            "events_by_kind": info["event_counts"],
+            "compactions": info["compactions"],
+        }
     sim = Simulation(spec)
     t0 = time.perf_counter()
     sc = sim.build()
@@ -199,7 +254,11 @@ def main():
     ap.add_argument("--families", nargs="+", default=list(FAMILIES),
                     choices=FAMILIES)
     ap.add_argument("--smoke", action="store_true",
-                    help="100-device cells only (CI artifact)")
+                    help="CI cells: 100-device cells plus the 100k-device "
+                         "sharded mobility cell")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="worker processes for sharded cells (1 = "
+                         "sequential tiles in this process)")
     ap.add_argument("--record-baseline", action="store_true",
                     help="stamp results as the pre-optimization baseline")
     ap.add_argument("--no-gate", action="store_true",
@@ -213,23 +272,31 @@ def main():
     print(f"fleet-engine throughput ({key}): sizes {sizes}")
     print(f"\n{'family':>10} {'devices':>8} {'edges':>6} {'requests':>9} "
           f"{'events':>9} {'wall':>8} {'events/s':>10}")
-    for family in args.families:
-        for nd in sizes:
-            # --smoke doubles as the CI observability cell: profile on
-            # (per-kind wall time, cache hit rates); gate runs stay
-            # observers-off so the measured path is the production one
-            cell = run_cell(family, nd, profile=args.smoke)
-            slot["cells"][f"{family}/{nd}"] = cell
-            print(f"{family:>10} {nd:>8} {cell['edges']:>6} "
-                  f"{cell['requests']:>9} {cell['events']:>9} "
-                  f"{cell['wall_s']:>7.2f}s {cell['events_per_s']:>10.0f}")
-            prof = cell.get("profile")
-            if prof:
-                top = sorted(prof["events"].items(),
-                             key=lambda kv: -kv[1]["wall_s"])[:3]
-                hot = ", ".join(f"{k} {v['wall_pct']:.0f}%" for k, v in top)
-                print(f"{'profile':>10} {'':>8} wall={prof['wall_s']:.2f}s "
-                      f"peak_heap={prof['peak_heap']} [{hot}]")
+    cells_to_run = [(family, nd) for family in args.families
+                    for nd in sizes]
+    if args.smoke:
+        # the CI sharded scale cell: 100k devices across geography tiles
+        cells_to_run.append(SMOKE_100K)
+    for family, nd in cells_to_run:
+        # --smoke doubles as the CI observability cell: profile on
+        # (per-kind wall time, cache hit rates) for unsharded cells; gate
+        # runs stay observers-off so the measured path is the production
+        # one (sharded cells report merged event/compaction counts instead)
+        cell = run_cell(family, nd, profile=args.smoke and nd < 10000,
+                        processes=args.processes)
+        slot["cells"][f"{family}/{nd}"] = cell
+        shard_tag = f"x{cell['shards']}" if cell.get("shards", 1) > 1 else ""
+        print(f"{family:>10} {nd:>8} {cell['edges']:>6} "
+              f"{cell['requests']:>9} {cell['events']:>9} "
+              f"{cell['wall_s']:>7.2f}s {cell['events_per_s']:>10.0f} "
+              f"{shard_tag}")
+        prof = cell.get("profile")
+        if prof:
+            top = sorted(prof["events"].items(),
+                         key=lambda kv: -kv[1]["wall_s"])[:3]
+            hot = ", ".join(f"{k} {v['wall_pct']:.0f}%" for k, v in top)
+            print(f"{'profile':>10} {'':>8} wall={prof['wall_s']:.2f}s "
+                  f"peak_heap={prof['peak_heap']} [{hot}]")
     slot["recorded_unix"] = int(time.time())
     slot["calib_s"] = round(min(calibrate() for _ in range(3)), 4)
     with open(BENCH_PATH, "w") as f:
@@ -240,7 +307,22 @@ def main():
         gate_key = f"{GATE_FAMILY}/{GATE_SIZE}"
         base = bench["baseline"]["cells"].get(gate_key)
         cur = bench["current"]["cells"].get(gate_key)
-        if base and cur:
+        if not base or not cur:
+            # a missing gate cell must not read as a pass: fail loudly with
+            # what each recording actually holds (--no-gate to measure only)
+            missing = " and ".join(
+                f"{slot_name!r} (has {sorted(bench[slot_name]['cells'])})"
+                for slot_name, c in (("baseline", base), ("current", cur))
+                if not c)
+            msg = (f"perf gate: cell {gate_key!r} missing from {missing}; "
+                   f"re-record with --sizes {GATE_SIZE} (and "
+                   f"--record-baseline for the baseline slot) or pass "
+                   f"--no-gate to skip gating")
+            if args.no_gate:
+                print(f"[no-gate] {msg}")
+            else:
+                raise SystemExit(msg)
+        else:
             raw = cur["events_per_s"] / base["events_per_s"]
             # events per calibration unit: cancels machine-speed drift
             # between the two recordings (see calibrate())

@@ -64,8 +64,13 @@ class FleetEngine:
                  handover: Union[HandoverController, str, None] = None,
                  replan_max_coop: int = 1, max_coop: int = 3,
                  retain_records: bool = True,
+                 compact_ratio: Optional[float] = 0.5,
                  tracer=None, timeline=None, profiler=None):
         self.topo = topo
+        # EDF-heap tombstone compaction threshold (None disables); see
+        # _maybe_compact.  Summaries are bit-identical either way.
+        self.compact_ratio = compact_ratio
+        self.compactions = 0
         # observability (repro.obs, docs/observability.md) — all optional,
         # all read-only with respect to simulation state, so summaries are
         # bit-identical with observers attached or not (tests/test_obs.py):
@@ -155,6 +160,8 @@ class FleetEngine:
             edge.completed = 0
             edge.coop_inflight = 0
             edge.tokens_owed = 0
+        self.topo._soa.backlog_n[:] = 0
+        self.compactions = 0
         for dev in self.topo.devices:
             dev.busy_until_s = 0.0
         for req in workload:               # same: a workload list is reusable
@@ -231,7 +238,7 @@ class FleetEngine:
     # ---------------------------------------------------------------- events
     def _on_arrival(self, req: FleetRequest, evq: EventQueue,
                     metrics: FleetMetrics):
-        device = self.topo.devices[req.device]
+        device = self.topo.device(req.device)
         bw = device.link.bw_at(evq.now)
         tr = self.tracer
         if tr is not None:
@@ -247,7 +254,7 @@ class FleetEngine:
             if decision.local:
                 self._run_local(req, device, bw, evq)
                 return
-            edge = self.topo.edges[decision.primary]
+            edge = self.topo.edge(decision.primary)
         else:
             req.plan = self.stepper.plan(bw)
             if req.plan.partition == 0:
@@ -263,8 +270,8 @@ class FleetEngine:
                 # router the two bandwidths are identical and this is a
                 # no-op; for placement policies that pick another edge the
                 # old code silently kept the best-signal plan.  (The joint
-                # decision branch above still prices candidates at the best
-                # signal — ROADMAP: mobility-aware joint candidate pricing.)
+                # decision branch above already prices each candidate at
+                # its own primary's bandwidth — JointPlanner._decide_mobile.)
                 bw_serve = self._bw(device, edge.eid, evq.now)
                 if bw_serve != bw:
                     req.plan = self.stepper.plan(bw_serve)
@@ -296,6 +303,7 @@ class FleetEngine:
         heapq.heappush(edge.queue, entry)
         self._qseq += 1
         self.enqueued += 1
+        self._blg_add(edge, 1)
 
     def _dequeue(self, edge: EdgeNode, req: FleetRequest):
         """Remove a queued request in O(1): tombstone its heap entry."""
@@ -303,6 +311,39 @@ class FleetEngine:
         entry[2] = None
         edge.q_dead += 1
         self.tombstoned += 1
+        self._blg_add(edge, -1)
+        self._maybe_compact(edge)
+
+    @staticmethod
+    def _blg_add(edge: EdgeNode, delta: int):
+        """Maintain the SoA mirror of ``EdgeNode.backlog()`` (queued +
+        active, tombstones excluded) at its net-change sites: enqueue (+1),
+        tombstone (-1), completion (-1), migration off the batch (-1).
+        Queue->batch admission is net zero.  Bare edges (no topology) have
+        no row to maintain."""
+        s = edge._soa
+        if s is not None:
+            s.backlog_n[edge._idx] += delta
+
+    def _maybe_compact(self, edge: EdgeNode):
+        """Rebuild an edge's EDF heap once tombstones exceed
+        ``compact_ratio`` of its entries.  Lazy O(1) deletion alone lets
+        dead entries accumulate without bound over a long mobility run
+        (every push pays log of the *inflated* heap); dropping them and
+        re-heapifying is O(live) and amortized O(1) per tombstone.  Pop
+        order is untouched — the heap is a total order on (deadline, seq),
+        and admission skips tombstones either way — so summaries and the
+        handover log are bit-identical with compaction on or off
+        (tests/test_fleet_perf.py pins this)."""
+        ratio = self.compact_ratio
+        if ratio is None:
+            return
+        q_dead = edge.q_dead
+        if q_dead and q_dead >= ratio * len(edge.queue):
+            edge.queue = [en for en in edge.queue if en[2] is not None]
+            heapq.heapify(edge.queue)
+            edge.q_dead = 0
+            self.compactions += 1
 
     def _run_local(self, req: FleetRequest, device, bw: float,
                    evq: EventQueue):
@@ -376,6 +417,7 @@ class FleetEngine:
             edge.tokens_owed -= 1
             if req.tokens_done >= req.max_new_tokens:
                 edge.completed += 1
+                self._blg_add(edge, -1)
                 self._pending -= 1
                 self._untrack(req)
                 if self.tracer is not None:
@@ -436,7 +478,7 @@ class FleetEngine:
                 # (re-)acquire cooperative span slots; a migrated request
                 # re-acquires at its new edge set here
                 for eid in req.assign.eids[1:]:
-                    self.topo.edges[eid].coop_inflight += 1
+                    self.topo.edge(eid).coop_inflight += 1
                 req.coop_counted = True
             if self.model is not None and req.cache is None:
                 # migrated requests keep their shipped cache — re-prefilling
@@ -448,7 +490,7 @@ class FleetEngine:
         tr = self.tracer
         round_dt = 0.0
         for slot, req in enumerate(edge.active):
-            device = self.topo.devices[req.device]
+            device = self.topo.device(req.device)
             bw = self._bw(device, edge.eid, now)
             if req.plan is None:
                 req.plan = self.stepper.plan(bw)
@@ -574,7 +616,7 @@ class FleetEngine:
     def _release_coop(self, req: FleetRequest):
         if req.coop_counted:
             for eid in req.assign.eids[1:]:
-                self.topo.edges[eid].coop_inflight -= 1
+                self.topo.edge(eid).coop_inflight -= 1
             req.coop_counted = False
 
     def _apply_decision(self, req: FleetRequest, dec: JointDecision, *,
@@ -588,7 +630,7 @@ class FleetEngine:
         req.assign = dec.assign if dec.assign.k > 0 else None
         if acquire and req.assign is not None:
             for eid in req.assign.eids[1:]:
-                self.topo.edges[eid].coop_inflight += 1
+                self.topo.edge(eid).coop_inflight += 1
             req.coop_counted = True
 
     def _on_sample_sweep(self, evq: EventQueue, metrics: FleetMetrics):
@@ -608,9 +650,10 @@ class FleetEngine:
         dist = mob.distances_at(now)
         bw = mob.bw_matrix(now)
         servings: list = [()] * self.topo.num_devices
+        did0 = self.topo.did0
         for did, reqs in self._dev_inflight.items():
             if reqs:
-                servings[did] = tuple(sorted(
+                servings[did - did0] = tuple(sorted(
                     {r.edge for r in reqs
                      if r.edge >= 0 and not r.migrating}))
         fired = self.handover.observe_sweep(now, servings, dist, bw)
@@ -642,11 +685,11 @@ class FleetEngine:
 
     def _replan_device(self, did: int, evq: EventQueue,
                        metrics: FleetMetrics):
-        device = self.topo.devices[did]
+        device = self.topo.device(did)
         for req in list(self._dev_inflight.get(did, ())):
             if req.migrating or req.edge < 0:
                 continue                       # mid-transfer: nothing to do
-            edge = self.topo.edges[req.edge]
+            edge = self.topo.edge(req.edge)
             if req in edge.active:
                 # mid-decode: defer to the round boundary so the in-flight
                 # round's billing stays intact and the state cut is exact
@@ -669,7 +712,7 @@ class FleetEngine:
                        still_active: list):
         nbytes = self._move_cost(req)
         dec = self.replanner.replan(
-            req, self.topo.devices[req.device], self.topo, now,
+            req, self.topo.device(req.device), self.topo, now,
             allow_local=False, move_cost_s=nbytes / self.topo.edge_bw_bps)
         if dec is None or dec.local or dec.primary == edge.eid:
             if dec is not None and not dec.local:
@@ -679,6 +722,7 @@ class FleetEngine:
             still_active.append(req)
             return
         edge.tokens_owed -= req.max_new_tokens - req.tokens_done
+        self._blg_add(edge, -1)        # leaves the batch without completing
         self._ship(req, edge.eid, dec, nbytes, now, evq, metrics)
 
     def _replan_queued(self, req: FleetRequest, device, edge: EdgeNode,
@@ -733,7 +777,7 @@ class FleetEngine:
             # is the async pair above
             tr.complete("transfer", now, now + dt, tr.PID_NET, src_eid,
                         args=args)
-        metrics.add_handover(src_eid, dst, nbytes, now + dt)
+        metrics.add_handover(src_eid, dst, nbytes, now + dt, at_s=now)
         if nbytes > 0:
             evq.push(now + dt, "transfer", (src_eid, dst, nbytes))
         evq.push(now + dt, "handover", req)
@@ -743,7 +787,7 @@ class FleetEngine:
         """The state snapshot landed: resume the request at its new primary.
         The request keeps its deadline, token progress, and decode cache —
         exactly-once completion is preserved (tests/test_fleet_invariants)."""
-        edge = self.topo.edges[req.edge]
+        edge = self.topo.edge(req.edge)
         req.migrating = False
         if self.tracer is not None:
             tr = self.tracer

@@ -173,9 +173,12 @@ class JointPlanner:
                     device_load=device.slowdown,
                     edge_bw_bps=topo.edge_bw_bps, include_input=False)
                 is_local.append(False)
-                primaries.append(assign.eids[0])
-                sec.append(list(zip(assign.eids[1:],
-                                    assign.span_fractions()[1:])))
+                # SoA row indices (eid - eid0): global only when the
+                # planner serves the whole fleet, tile-local under sharding
+                primaries.append(assign.eids[0] - topo.eid0)
+                sec.append([(eid - topo.eid0, frac) for eid, frac in
+                            zip(assign.eids[1:],
+                                assign.span_fractions()[1:])])
             plans.append(plan)
             assigns.append(assign)
             accs.append(plan.accuracy)
@@ -213,10 +216,18 @@ class JointPlanner:
         :meth:`_score_tables`; every arithmetic step applies the same float
         ops in the same order as :meth:`decide_scalar`, so the two paths
         pick bit-identical decisions (property-pinned by
-        tests/test_fleet_perf.py)."""
+        tests/test_fleet_perf.py).
+
+        With a mobility model attached, candidates are instead priced at
+        the bandwidth the device would see *to each candidate's primary*
+        (as :meth:`replan` always has) — the device's own link reports the
+        best-signal edge, and pricing a far primary's uplink at that rate
+        systematically over-admits far edges (docs/fleet.md)."""
+        if self.mobility is not None:
+            return self._decide_mobile(req, device, topo, now)
         bw = device.link.bw_at(now)
         tab = self._score_tables(bw, device, topo)
-        blg = np.array([e.backlog_s() for e in topo.edges])
+        blg = topo.backlog_s_row()     # vectorized EdgeNode.backlog_s row
         input_t = self.stepper.graph.input_bytes / bw
         base = np.where(tab["local"], device.local_backlog_s(now),
                         blg[tab["primary"]] + input_t)
@@ -243,14 +254,72 @@ class JointPlanner:
                              est_s=float(est[i]),
                              est_min_s=float(est_min[i]))
 
+    def _decide_mobile(self, req, device: DeviceNode, topo: FleetTopology,
+                       now: float) -> JointDecision:
+        """Per-primary pricing for :meth:`decide` under mobility: one
+        geometry row per arrival, each candidate set priced at the
+        bandwidth to *its own* primary (the device-only candidate at the
+        nearest edge's rate, which is what ``device.link.bw_at`` reports).
+        Selection semantics are identical to the static path."""
+        did = device.did
+        drow = self.mobility.distance_row(did, now)
+        brow = self.mobility.bw_row(did, now)
+        nearest_i = int(np.argmin(drow))
+        blg = topo.backlog_s_row()
+        prefill_steps = max(1, req.prompt_len // self.prefill_div)
+        cands: List[JointDecision] = []
+        for cand in self._sets:
+            i0 = (cand[0].eid - topo.eid0) if cand else nearest_i
+            bw = float(brow[i0])
+            speeds = tuple(e.speed for e in cand)
+            plan = self.stepper.plan_multi(
+                bw, speeds, device_load=device.slowdown,
+                edge_bw_bps=topo.edge_bw_bps)
+            if (plan.partition == 0) != (len(cand) == 0):
+                continue               # collapsed duplicate of device-only
+            if plan.partition == 0:
+                assign = CoopAssignment((), (), ())
+                per_exit = self.stepper.per_exit_times_cached(
+                    0, bw, device_load=device.slowdown)
+                base = device.local_backlog_s(now)
+            else:
+                assign = assign_spans(plan.partition, cand)
+                per_exit = self.stepper.per_exit_times_coop_cached(
+                    plan.partition, assign.speeds, bw,
+                    device_load=device.slowdown,
+                    edge_bw_bps=topo.edge_bw_bps, include_input=False)
+                base = float(blg[assign.eids[0] - topo.eid0]) + \
+                    self.stepper.input_time(plan.partition, bw)
+                for frac, eid in zip(assign.span_fractions()[1:],
+                                     assign.eids[1:]):
+                    base += float(blg[eid - topo.eid0]) * frac
+            prefill = per_exit[plan.exit_point - 1] * prefill_steps
+            est = base + prefill + \
+                per_exit[plan.exit_point - 1] * req.max_new_tokens
+            est_min = base + prefill + per_exit[0] * req.max_new_tokens
+            cands.append(JointDecision(plan=plan, assign=assign,
+                                       est_s=est, est_min_s=est_min))
+        slack = req.deadline_s - now
+        feasible = [d for d in cands if d.est_s <= slack]
+        if feasible:
+            return min(feasible, key=lambda d: (-d.plan.accuracy, d.est_s,
+                                                d.assign.eids))
+        return min(cands, key=lambda d: (d.est_min_s, d.assign.eids))
+
     def decide_scalar(self, req, device: DeviceNode, topo: FleetTopology,
                       now: float) -> JointDecision:
         """Reference implementation of :meth:`decide` (one Python loop over
         candidate sets) — kept as the oracle the vectorized path is tested
-        against."""
-        bw = device.link.bw_at(now)
+        against.  Prices per-primary when a mobility model is attached,
+        matching :meth:`_decide_mobile` (scalar geometry calls instead of
+        rows)."""
+        link_bw = device.link.bw_at(now)
         cands: List[JointDecision] = []
         for cand in self._sets:
+            if self.mobility is not None and cand:
+                bw = self.mobility.bw(device.did, cand[0].eid, now)
+            else:
+                bw = link_bw
             speeds = tuple(e.speed for e in cand)
             plan = self.stepper.plan_multi(
                 bw, speeds, device_load=device.slowdown,
@@ -273,7 +342,7 @@ class JointPlanner:
                     plan.partition, assign.speeds, bw,
                     device_load=device.slowdown,
                     edge_bw_bps=topo.edge_bw_bps, include_input=False)
-                primary = topo.edges[assign.eids[0]]
+                primary = topo.edge(assign.eids[0])
                 base = primary.backlog_s() + \
                     self.stepper.input_time(plan.partition, bw)
                 # secondaries are contended resources too: bill their current
@@ -281,7 +350,7 @@ class JointPlanner:
                 # we would place there
                 for frac, eid in zip(assign.span_fractions()[1:],
                                      assign.eids[1:]):
-                    base += topo.edges[eid].backlog_s() * frac
+                    base += topo.edge(eid).backlog_s() * frac
             prefill = per_exit[plan.exit_point - 1] * prefill_steps
             est = base + prefill + \
                 per_exit[plan.exit_point - 1] * req.max_new_tokens
@@ -324,6 +393,7 @@ class JointPlanner:
         collapses to an unusable plan: the caller keeps the request where
         it is."""
         did = device.did
+        eid0 = topo.eid0
         drow = brow = None
         if self.mobility is not None:
             # one vectorized geometry row per replan instead of M scalar
@@ -331,11 +401,12 @@ class JointPlanner:
             # to mobility.distance/bw)
             drow = self.mobility.distance_row(did, now)
             brow = self.mobility.bw_row(did, now)
-            order = tuple(sorted(range(topo.num_edges),
-                                 key=lambda e: (drow[e], e)))
+            order = tuple(sorted(range(eid0, eid0 + topo.num_edges),
+                                 key=lambda e: (drow[e - eid0], e)))
         else:
             order = tuple(e.eid for e in sorted(
                 topo.edges, key=lambda e: (e.speed, e.eid)))
+        blg = topo.backlog_s_row()     # vectorized EdgeNode.backlog_s row
         tokens_left = req.max_new_tokens - req.tokens_done
         prefill_steps = max(1, req.prompt_len // self.prefill_div)
         cands: List[JointDecision] = []
@@ -343,8 +414,9 @@ class JointPlanner:
             if not cand and not allow_local:
                 continue
             if self.mobility is not None:
-                eid0 = cand[0].eid if cand else int(np.argmin(drow))
-                bw = float(brow[eid0])
+                primary_eid = cand[0].eid if cand \
+                    else eid0 + int(np.argmin(drow))
+                bw = float(brow[primary_eid - eid0])
             else:
                 bw = device.link.bw_at(now)
             speeds = tuple(e.speed for e in cand)
@@ -367,11 +439,11 @@ class JointPlanner:
                     plan.partition, assign.speeds, bw,
                     device_load=device.slowdown,
                     edge_bw_bps=topo.edge_bw_bps, include_input=False)
-                primary = topo.edges[assign.eids[0]]
-                base = primary.backlog_s()
+                primary = topo.edge(assign.eids[0])
+                base = float(blg[assign.eids[0] - eid0])
                 for frac, eid in zip(assign.span_fractions()[1:],
                                      assign.eids[1:]):
-                    base += topo.edges[eid].backlog_s() * frac
+                    base += float(blg[eid - eid0]) * frac
                 if req.edge >= 0 and assign.eids[0] == req.edge:
                     # the request's own owed tokens sit in this backlog;
                     # pricing them against itself would bias every replan

@@ -22,7 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List
 
-from repro.obs.registry import MetricsRegistry
+from repro.obs.registry import Counter, CounterFamily, MetricsRegistry
 
 
 @dataclass
@@ -64,6 +64,15 @@ class FleetMetrics:
     # are *also* billed as ordinary backbone transfer events, so migrated
     # traffic is conserved against transfer_bytes (invariant-tested)
     handover_log: List[tuple] = field(default_factory=list)
+    # ---- shard-merge keys (repro.sim.shard, docs/performance.md): the
+    # virtual time each sample/log entry was *appended* at.  A sharded run
+    # produces one FleetMetrics per tile; merging the per-tile streams by
+    # (append time, tile index) with a stable sort reproduces the exact
+    # append order of the equivalent single-process run, which is what the
+    # order-sensitive aggregates (np.mean pairwise sums, handover_log) need
+    # for bit-identical summaries.
+    finish_keys: List[float] = field(default_factory=list)
+    handover_at: List[float] = field(default_factory=list)
 
     def __post_init__(self):
         # ---- running aggregates (the only inputs summary() reads), all
@@ -106,6 +115,7 @@ class FleetMetrics:
         if rec.met_slo:
             self._tenant_met.inc(rec.tenant)
         self.horizon_s = max(self.horizon_s, rec.finish_s)
+        self.finish_keys.append(rec.finish_s)
         if self.retain_records:
             self.records.append(rec)
 
@@ -124,12 +134,73 @@ class FleetMetrics:
         """Track span compute a secondary edge served for another edge."""
         self.coop_busy_s[eid] = self.coop_busy_s.get(eid, 0.0) + dt_s
 
-    def add_handover(self, src: int, dst: int, nbytes: int, t_s: float):
-        """Log one mid-request migration completing at virtual time t_s."""
+    def add_handover(self, src: int, dst: int, nbytes: int, t_s: float,
+                     at_s: float = None):
+        """Log one mid-request migration completing at virtual time t_s.
+        ``at_s`` is the virtual time the migration was *decided* (the append
+        time) — the shard-merge key; defaults to ``t_s``."""
         self._handovers.inc()
         self._migrated.inc(nbytes)
         if self.retain_records:
             self.handover_log.append((round(t_s, 9), src, dst, nbytes))
+            self.handover_at.append(t_s if at_s is None else at_s)
+
+    # ------------------------------------------------------------ sharding
+    @classmethod
+    def merged(cls, parts: List["FleetMetrics"],
+               num_edges: int) -> "FleetMetrics":
+        """Fold per-tile metrics from a sharded run (repro.sim.shard) into
+        the metrics the equivalent single-process run would have produced,
+        bit-identically.
+
+        Tiles are disjoint (block-diagonal reachability), so per-edge float
+        aggregates never collide across parts and integer counters sum
+        exactly.  The order-sensitive pieces — the latency / queue-delay
+        sample buffers (``np.mean`` is a pairwise sum over the append
+        order) and ``handover_log`` — are rebuilt by a *stable* merge of
+        the per-tile append streams keyed on (append virtual time, tile
+        index): the union event loop pops cross-tile events in time order,
+        and grid-aligned ties (the sampling sweep) process devices in
+        ascending id = tile order, which is exactly this key."""
+        out = cls(num_edges=num_edges,
+                  retain_records=all(p.retain_records for p in parts))
+        rows = []
+        for pi, p in enumerate(parts):
+            rows.extend((k, pi, j) for j, k in enumerate(p.finish_keys))
+        rows.sort(key=lambda r: (r[0], r[1]))   # stable: within-tile order
+        for _, pi, j in rows:
+            p = parts[pi]
+            out._lat.observe(p._lat.samples[j])
+            out._qd.observe(p._qd.samples[j])
+            out.finish_keys.append(p.finish_keys[j])
+            if out.retain_records:
+                out.records.append(p.records[j])
+        hrows = []
+        for pi, p in enumerate(parts):
+            hrows.extend((k, pi, j) for j, k in enumerate(p.handover_at))
+        hrows.sort(key=lambda r: (r[0], r[1]))
+        for k, pi, j in hrows:
+            out.handover_log.append(parts[pi].handover_log[j])
+            out.handover_at.append(k)
+        for p in parts:
+            out.horizon_s = max(out.horizon_s, p.horizon_s)
+            out.transfer_events += p.transfer_events
+            # per-edge / per-pair keys are tile-disjoint: plain insertion,
+            # no cross-part float accumulation can occur
+            for eid, v in p.edge_busy_s.items():
+                out.edge_busy_s[eid] = out.edge_busy_s.get(eid, 0.0) + v
+            for eid, v in p.coop_busy_s.items():
+                out.coop_busy_s[eid] = out.coop_busy_s.get(eid, 0.0) + v
+            for key, v in p.transfer_bytes.items():
+                out.transfer_bytes[key] = out.transfer_bytes.get(key, 0) + v
+            for name, inst in p.registry._instruments.items():
+                if isinstance(inst, Counter):
+                    out.registry.counter(name).value += inst.value
+                elif isinstance(inst, CounterFamily):
+                    fam = out.registry.family(name)
+                    for label, v in inst.items():
+                        fam.inc(label, v)
+        return out
 
     @property
     def handover_count(self) -> int:

@@ -88,7 +88,10 @@ def random_trajectory(rng: np.random.Generator, speed: float,
     times, pts = [0.0], [start]
     while times[-1] < horizon_s:
         nxt = rng.uniform(0.0, area, 2)
-        d = float(np.linalg.norm(nxt - pts[-1]))
+        # scalar hypot == np.linalg.norm's 2-vector reduction, bitwise
+        dx = float(nxt[0]) - float(pts[-1][0])
+        dy = float(nxt[1]) - float(pts[-1][1])
+        d = math.sqrt(dx * dx + dy * dy)
         if d < 1e-9:
             continue
         times.append(times[-1] + d / speed)
@@ -103,7 +106,16 @@ class MobilityModel:
     ``bw(did, eid, t) = peak_bps / (1 + (d / d_ref)^path_exp) * noise``,
     floored at ``floor_bps``.  The noise is a pre-drawn per-(device, time
     slot) multiplicative grid so that two runs of the same seed observe the
-    identical bandwidth history (the fleet determinism contract)."""
+    identical bandwidth history (the fleet determinism contract).
+
+    ``eid0``/``did0`` make the model *tile-capable* (repro.sim.shard): a
+    sharded run hands each geography tile its own model covering only that
+    tile's edges and devices, with ids offset into the fleet-global
+    namespace.  Scalar APIs (``bw``, ``distance``, ``nearest``) speak
+    global ids; the row/matrix APIs (``distance_row``, ``bw_row``,
+    ``distances_at``, ``bw_matrix``) stay tile-local-indexed — callers
+    offset columns by ``eid0`` (as :class:`~repro.fleet.joint.JointPlanner`
+    does with ``topo.eid0``)."""
     edge_pos: np.ndarray                     # [M, 2]
     trajectories: List[Trajectory]           # one per device
     peak_bps: float = 6.0 * MBPS
@@ -112,9 +124,11 @@ class MobilityModel:
     path_exp: float = 3.0
     noise: Optional[np.ndarray] = None       # [N, T] multiplicative
     noise_dt: float = 0.5
+    eid0: int = 0                            # first global edge id
+    did0: int = 0                            # first global device id
 
     def pos(self, did: int, t_s: float) -> np.ndarray:
-        return self.trajectories[did].pos(t_s)
+        return self.trajectories[did - self.did0].pos(t_s)
 
     def _edge_xy(self) -> List[Tuple[float, float]]:
         xy = getattr(self, "_edge_xy_l", None)
@@ -126,8 +140,8 @@ class MobilityModel:
     def distance(self, did: int, eid: int, t_s: float) -> float:
         # sqrt(dx*dx + dy*dy): the exact reduction np.linalg.norm applies
         # to a 2-vector, without building one
-        x, y = self.trajectories[did].pos_xy(t_s)
-        ex, ey = self._edge_xy()[eid]
+        x, y = self.trajectories[did - self.did0].pos_xy(t_s)
+        ex, ey = self._edge_xy()[eid - self.eid0]
         dx, dy = x - ex, y - ey
         return math.sqrt(dx * dx + dy * dy)
 
@@ -137,35 +151,103 @@ class MobilityModel:
         if self.noise is not None:
             slot = min(max(int(t_s / self.noise_dt), 0),
                        self.noise.shape[1] - 1)
-            raw *= float(self.noise[did, slot])
+            raw *= float(self.noise[did - self.did0, slot])
         return max(raw, self.floor_bps)
 
+    # ----------------------------------------------- spatial nearest-edge
+    # A uniform grid over the edge positions answers nearest() by expanding
+    # ring search instead of an O(M) scan.  Bit-identical to
+    # argmin(distance_row): per-candidate distances use the same scalar
+    # sqrt(dx*dx+dy*dy) as distance() (== np.sqrt per element), ties break
+    # on the lowest edge index ((d, i) lexicographic — argmin's
+    # first-minimum), and rings keep expanding while a tie at the ring's
+    # lower bound is still possible (<= , not <).
+
+    def _grid(self):
+        g = getattr(self, "_grid_t", None)
+        if g is None:
+            xy = self._edge_xy()
+            m = len(xy)
+            gdim = max(1, int(math.sqrt(m)))
+            minx = min(p[0] for p in xy)
+            miny = min(p[1] for p in xy)
+            ext = max(max(p[0] for p in xy) - minx,
+                      max(p[1] for p in xy) - miny)
+            cs = ext / gdim if ext > 0.0 else 1.0
+            cells: List[List[int]] = [[] for _ in range(gdim * gdim)]
+            for i, (x, y) in enumerate(xy):
+                cx = min(int((x - minx) / cs), gdim - 1)
+                cy = min(int((y - miny) / cs), gdim - 1)
+                cells[cy * gdim + cx].append(i)  # ascending i per cell
+            self._grid_t = g = (gdim, minx, miny, cs, cells)
+        return g
+
+    def _nearest_xy(self, x: float, y: float) -> int:
+        """Tile-local index of the edge closest to ``(x, y)``; exact
+        argmin-equivalent (see the block comment above)."""
+        gdim, minx, miny, cs, cells = self._grid()
+        xy = self._edge_xy()
+        cx = min(max(int((x - minx) / cs), 0), gdim - 1)
+        cy = min(max(int((y - miny) / cs), 0), gdim - 1)
+        best_d = math.inf
+        best_i = -1
+        max_r = max(cx, cy, gdim - 1 - cx, gdim - 1 - cy)
+        for r in range(max_r + 1):
+            # any edge in ring r is >= (r-1)*cs away (axis separation); a
+            # strictly greater bound cannot beat OR tie the incumbent
+            if best_i >= 0 and (r - 1) * cs > best_d:
+                break
+            x0, x1 = max(cx - r, 0), min(cx + r, gdim - 1)
+            y0, y1 = max(cy - r, 0), min(cy + r, gdim - 1)
+            for gy in range(y0, y1 + 1):
+                on_rim_y = gy == cy - r or gy == cy + r
+                for gx in range(x0, x1 + 1):
+                    if r and not on_rim_y and gx != cx - r and gx != cx + r:
+                        continue            # interior: scanned by ring < r
+                    for i in cells[gy * gdim + gx]:
+                        ex, ey = xy[i]
+                        dx, dy = x - ex, y - ey
+                        d = math.sqrt(dx * dx + dy * dy)
+                        if d < best_d or (d == best_d and i < best_i):
+                            best_d, best_i = d, i
+        return best_i
+
     def nearest(self, did: int, t_s: float) -> int:
-        """Closest edge (deterministic tie-break on lowest eid)."""
+        """Closest edge, as a *global* eid (deterministic tie-break on the
+        lowest eid — the first minimum ``argmin`` would take over
+        :meth:`distance_row`), answered by the spatial grid in O(1)-ish."""
+        x, y = self.trajectories[did - self.did0].pos_xy(t_s)
+        return self.eid0 + self._nearest_xy(x, y)
+
+    def nearest_bruteforce(self, did: int, t_s: float) -> int:
+        """Reference O(M) nearest (the pre-grid implementation); the
+        equivalence tests pin ``nearest == nearest_bruteforce`` everywhere,
+        including exact-tie geometries."""
         row = self.distance_row(did, t_s)
-        return int(np.argmin(row))      # argmin takes the first minimum
+        return self.eid0 + int(np.argmin(row))  # first minimum
 
     def distance_row(self, did: int, t_s: float) -> np.ndarray:
-        """One device's distance to every edge (``[M]``), entry ``e`` ==
-        ``distance(did, e, t_s)`` bitwise — the replanner's nearest-first
-        candidate ordering reads this instead of M scalar calls."""
-        x, y = self.trajectories[did].pos_xy(t_s)
+        """One device's distance to every edge (tile-local ``[M]``), entry
+        ``e`` == ``distance(did, eid0 + e, t_s)`` bitwise — the replanner's
+        nearest-first candidate ordering reads this instead of M scalar
+        calls."""
+        x, y = self.trajectories[did - self.did0].pos_xy(t_s)
         dx = x - self.edge_pos[:, 0]
         dy = y - self.edge_pos[:, 1]
         return np.sqrt(dx * dx + dy * dy)
 
     def bw_row(self, did: int, t_s: float) -> np.ndarray:
-        """One device's bandwidth to every edge (``[M]``), entry ``e`` ==
-        ``bw(did, e, t_s)`` bitwise — this row prices *replans*, so it must
-        match the engine's scalar billing exactly; the ``**`` runs through
-        scalar pow per edge because numpy's SIMD pow can differ from it in
-        the last ulp (see :meth:`bw_matrix`)."""
+        """One device's bandwidth to every edge (tile-local ``[M]``), entry
+        ``e`` == ``bw(did, eid0 + e, t_s)`` bitwise — this row prices
+        *replans*, so it must match the engine's scalar billing exactly;
+        the ``**`` runs through scalar pow per edge because numpy's SIMD
+        pow can differ from it in the last ulp (see :meth:`bw_matrix`)."""
         d = self.distance_row(did, t_s)
         noise = 1.0
         if self.noise is not None:
             slot = min(max(int(t_s / self.noise_dt), 0),
                        self.noise.shape[1] - 1)
-            noise = float(self.noise[did, slot])
+            noise = float(self.noise[did - self.did0, slot])
         peak, d_ref, exp_ = self.peak_bps, self.d_ref, self.path_exp
         out = np.empty(len(d))
         for e in range(len(d)):
@@ -406,6 +488,9 @@ class HandoverController:
         if self.policy == "none":
             return []
         n = len(servings)
+        # servings/dist/bw are tile-local-indexed; serving eids and the
+        # fired device ids are global (the engine replans by global did)
+        e0, d0 = self.mobility.eid0, self.mobility.did0
         fired: List[int] = []
         if self.policy == "oracle":
             near = dist.argmin(axis=1)          # first minimum per row
@@ -414,10 +499,11 @@ class HandoverController:
                     continue
                 nr = int(near[did])
                 d_near = float(dist[did, nr])
-                if any(eid != nr and d_near <= (1.0 - self.hysteresis) *
-                       float(dist[did, eid]) for eid in serving) and \
-                        self._rate_limit(did, now):
-                    fired.append(did)
+                if any(eid - e0 != nr and d_near <=
+                       (1.0 - self.hysteresis) * float(dist[did, eid - e0])
+                       for eid in serving) and \
+                        self._rate_limit(did + d0, now):
+                    fired.append(did + d0)
             return fired
         # bocd: one bank row per device, all rows updated in lockstep (the
         # engine samples every device on the same grid, so run lengths agree)
@@ -430,13 +516,14 @@ class HandoverController:
         has_serving = np.zeros(n, dtype=bool)
         for did, serving in enumerate(servings):
             if serving:
-                eid = max(serving, key=lambda e: (float(dist[did, e]), e))
+                eid = max(serving,
+                          key=lambda e: (float(dist[did, e - e0]), e))
                 has_serving[did] = True
-                xs[did] = bw[did, eid]
+                xs[did] = bw[did, eid - e0]
         changed = self.bank.update(xs / MBPS) & has_serving
         for did in np.flatnonzero(changed):
-            if self._rate_limit(int(did), now):
-                fired.append(int(did))
+            if self._rate_limit(int(did) + d0, now):
+                fired.append(int(did) + d0)
         return fired
 
 
@@ -449,13 +536,15 @@ def make_mobile_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
                       peak_mbps: float = 6.0, floor_mbps: float = 0.05,
                       d_ref: float = 0.25, path_exp: float = 3.0,
                       noise_sigma: float = 0.1, noise_dt: float = 0.5,
-                      edge_bw_mbps: float = 400.0
+                      edge_bw_mbps: float = 400.0,
+                      eid0: int = 0, did0: int = 0
                       ) -> Tuple[FleetTopology, MobilityModel]:
     """Sample a reproducible *mobile* fleet: edges on a grid over
     ``[0, area]^2``, devices on random-waypoint trajectories at ``speed``
     (jittered +/-50% per device), per-pair bandwidth from the path-loss law.
     Device links are :class:`MobileLink`s so placement-only routers keep
-    working unchanged."""
+    working unchanged.  ``eid0``/``did0`` offset all ids into a
+    fleet-global namespace for geography-sharded runs (repro.sim.shard)."""
     rng = np.random.default_rng(seed)
     pos = edge_grid(num_edges, area)
     trajs = [random_trajectory(rng, speed * float(rng.uniform(0.5, 1.5)),
@@ -469,14 +558,18 @@ def make_mobile_fleet(num_devices: int, num_edges: int, *, seed: int = 0,
                              peak_bps=peak_mbps * MBPS,
                              floor_bps=floor_mbps * MBPS,
                              d_ref=d_ref, path_exp=path_exp,
-                             noise=noise, noise_dt=noise_dt)
+                             noise=noise, noise_dt=noise_dt,
+                             eid0=eid0, did0=did0)
     lo, hi = device_slowdown_range
-    devices = [DeviceNode(i, MobileLink(mobility, i),
-                          slowdown=float(rng.uniform(lo, hi)))
-               for i in range(num_devices)]
+    # one batched draw == num_devices sequential scalar uniforms, bitwise
+    slowdowns = rng.uniform(lo, hi, num_devices)
+    devices = [DeviceNode(did0 + i, MobileLink(mobility, did0 + i),
+                          slowdown=s)
+               for i, s in enumerate(slowdowns.tolist())]
     speeds = np.linspace(1.0, max_edge_slowdown, num_edges) if hetero_edges \
         else np.ones(num_edges)
-    edges = [EdgeNode(j, capacity=edge_capacity, speed=float(speeds[j]))
+    edges = [EdgeNode(eid0 + j, capacity=edge_capacity,
+                      speed=float(speeds[j]))
              for j in range(num_edges)]
     topo = FleetTopology(devices, edges, edge_bw_bps=edge_bw_mbps * 125e3)
     return topo, mobility

@@ -58,7 +58,10 @@ class JoinShortestQueueRouter(Router):
     name = "jsq"
 
     def route(self, req, device, topo, now) -> EdgeNode:
-        return min(topo.edges, key=lambda e: (e.backlog(), e.eid))
+        # engine-maintained SoA row; np.argmin takes the first minimum,
+        # which is the lowest eid — same tie-break as the scalar
+        # min((backlog, eid)) scan over edge objects
+        return topo.edges[int(np.argmin(topo.backlog_n_row()))]
 
 
 class BandwidthAwareRouter(Router):
@@ -92,7 +95,7 @@ class BandwidthAwareRouter(Router):
         # also pins the edge order), never on object identity — a router
         # instance may outlive the topology it first served
         key = (quantize_bw(bw), plan.partition, plan.exit_point,
-               device.slowdown, tuple(e.speed for e in topo.edges))
+               device.slowdown, topo.speed_key)
         steps = self._steps.get(key)
         if steps is None:
             steps = self._steps[key] = np.array([
@@ -100,9 +103,7 @@ class BandwidthAwareRouter(Router):
                     plan.partition, bw, edge_load=e.speed,
                     device_load=device.slowdown)[plan.exit_point - 1]
                 for e in topo.edges])
-        blg = np.array([(e.ema_round_s if e.ema_round_s > 0 else 1e-3)
-                        * e.tokens_owed / max(e.capacity, 1)
-                        for e in topo.edges])   # inlined EdgeNode.backlog_s
+        blg = topo.backlog_s_row()          # vectorized EdgeNode.backlog_s
         est = blg + steps * req.max_new_tokens
         return topo.edges[int(est.argmin())]
 
@@ -119,7 +120,7 @@ class NearestEdgeRouter(Router):
         self.mobility = mobility
 
     def route(self, req, device, topo, now) -> EdgeNode:
-        return topo.edges[self.mobility.nearest(device.did, now)]
+        return topo.edge(self.mobility.nearest(device.did, now))
 
 
 class JointRouter(Router):
@@ -138,7 +139,7 @@ class JointRouter(Router):
         dec = self.decide(req, device, topo, now)
         assert dec.assign.eids, \
             "device-only decision has no edge — callers must use decide()"
-        return topo.edges[dec.assign.eids[0]]
+        return topo.edge(dec.assign.eids[0])
 
 
 # alias -> canonical policy name; the single source of truth for which
@@ -190,5 +191,10 @@ def make_router(name: str, stepper=None, topo=None,
         raise ValueError(
             "joint routing is static-environment only: the plan cache it "
             "fans out over assumes dynamic=False")
+    # mobility (when the fleet has one) lets decide() price every candidate
+    # primary at that edge's observed bandwidth instead of the device's
+    # best-signal link — without it, joint routing systematically
+    # over-admits far edges under mobility (docs/fleet.md)
     return JointRouter(JointPlanner(stepper, topo, max_coop=max_coop,
-                                    prefill_div=prefill_div))
+                                    prefill_div=prefill_div,
+                                    mobility=mobility))

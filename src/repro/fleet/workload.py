@@ -86,10 +86,13 @@ def diurnal_rate(t_s: float, base_hz: float, peak_hz: float,
 
 def diurnal_arrivals(base_hz: float, peak_hz: float, period_s: float,
                      horizon_s: float, rng: np.random.Generator) -> np.ndarray:
-    """Inhomogeneous Poisson arrivals by thinning against ``peak_hz``."""
+    """Inhomogeneous Poisson arrivals by thinning against ``peak_hz``.
+
+    ``diurnal_rate`` is pure ufunc math, so evaluating it on the whole
+    candidate vector is bit-identical to the per-candidate scalar loop."""
     cand = poisson_arrivals(peak_hz, horizon_s, rng)
     keep = rng.uniform(0.0, 1.0, len(cand)) * peak_hz <= \
-        np.array([diurnal_rate(t, base_hz, peak_hz, period_s) for t in cand])
+        diurnal_rate(cand, base_hz, peak_hz, period_s)
     return cand[keep]
 
 
@@ -98,13 +101,16 @@ def make_workload(num_devices: int, *, rate_hz: float, horizon_s: float,
                   tenants: Sequence[TenantClass] = DEFAULT_TENANTS,
                   device_skew: float = 0.0, peak_factor: float = 4.0,
                   period_s: Optional[float] = None, prompt_len: int = 8,
-                  vocab_size: int = 0) -> List[FleetRequest]:
+                  vocab_size: int = 0, rid0: int = 0,
+                  did0: int = 0) -> List[FleetRequest]:
     """Generate the request stream for one simulation.
 
     ``rate_hz`` is the *fleet-wide* mean arrival rate.  ``device_skew`` > 0
     concentrates traffic on low-index devices with p(i) ~ (i+1)^-skew.
     ``vocab_size`` > 0 additionally samples real token prompts (needed only
-    when the fleet engine executes the actual model).
+    when the fleet engine executes the actual model).  ``rid0``/``did0``
+    offset request and device ids into a fleet-global namespace — geography
+    tiles (repro.sim.shard) generate their own streams with disjoint ids.
     """
     rng = np.random.default_rng(seed)
     if arrival == "poisson":
@@ -122,14 +128,29 @@ def make_workload(num_devices: int, *, rate_hz: float, horizon_s: float,
     ten_w = np.array([t.weight for t in tenants], float)
     ten_w /= ten_w.sum()
 
+    # Inverse-CDF sampling with the cumulative weights built once.  Each
+    # draw consumes exactly one uniform double and lands on the same index
+    # as ``rng.choice(n, p=w)`` (which rebuilds the O(n) CDF per call —
+    # the build-time bottleneck at 10k+ devices), so request streams are
+    # bit-identical to the per-call form.
+    dev_cdf = np.cumsum(dev_w)
+    dev_cdf /= dev_cdf[-1]
+    ten_cdf = np.cumsum(ten_w)
+    ten_cdf /= ten_cdf[-1]
+    n_ten = len(tenants)
+
     reqs: List[FleetRequest] = []
-    for rid, t in enumerate(times):
-        dev = int(rng.choice(num_devices, p=dev_w))
-        ten = tenants[int(rng.choice(len(tenants), p=ten_w))]
+    times_l = times.tolist()
+    for rid, t in enumerate(times_l):
+        dev = min(int(dev_cdf.searchsorted(rng.random(), side="right")),
+                  num_devices - 1)
+        ten = tenants[min(int(ten_cdf.searchsorted(rng.random(),
+                                                   side="right")), n_ten - 1)]
         prompt = rng.integers(0, vocab_size, prompt_len).astype(np.int32) \
             if vocab_size > 0 else None
         reqs.append(FleetRequest(
-            rid=rid, device=dev, tenant=ten.name, slo_s=ten.slo_s,
-            max_new_tokens=ten.max_new_tokens, arrival_s=float(t),
+            rid=rid0 + rid, device=did0 + dev, tenant=ten.name,
+            slo_s=ten.slo_s,
+            max_new_tokens=ten.max_new_tokens, arrival_s=t,
             prompt_len=prompt_len, prompt=prompt))
     return reqs

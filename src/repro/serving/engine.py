@@ -72,14 +72,27 @@ class ServeStats:
         }
 
 
+_QBW_MEMO: Dict[float, float] = {}
+
+
 def quantize_bw(bw_bps: float, sig_figs: int = 3) -> float:
     """Round a bandwidth observation to ``sig_figs`` significant figures —
     the plan-cache key: devices in the same (quantized) bandwidth state share
-    one Algorithm-1/2 search result."""
+    one Algorithm-1/2 search result.  Memoized at the default precision (a
+    pure function; trace bandwidths recur constantly on the fleet hot path,
+    where the floor/log10 pair is measurable)."""
+    if sig_figs == 3:
+        hit = _QBW_MEMO.get(bw_bps)
+        if hit is not None:
+            return hit
     if bw_bps <= 0.0:
-        return 0.0
-    mag = 10.0 ** (math.floor(math.log10(bw_bps)) - sig_figs + 1)
-    return round(bw_bps / mag) * mag
+        q = 0.0
+    else:
+        mag = 10.0 ** (math.floor(math.log10(bw_bps)) - sig_figs + 1)
+        q = round(bw_bps / mag) * mag
+    if sig_figs == 3 and len(_QBW_MEMO) < (1 << 20):
+        _QBW_MEMO[bw_bps] = q
+    return q
 
 
 class CoInferenceStepper:
@@ -101,6 +114,11 @@ class CoInferenceStepper:
         self.plan_cache: Dict[tuple, CoInferencePlan] = \
             plan_cache if plan_cache is not None else {}
         self._step_cache: Dict[tuple, List[float]] = {}
+        # (partition, qbw, edge_load) -> per-exit accumulator snapshots
+        # taken after the edge-side terms of per_exit_times' fold; misses
+        # on the continuous device_load axis replay only the device suffix
+        # (see per_exit_times_cached)
+        self._prefix_cache: Dict[tuple, tuple] = {}
         # (exit, assignment, backbone bw) -> precomputed hop/span timeline;
         # lives on the stepper so every engine sharing it (the whole fleet)
         # shares one memo — see FleetEngine._emit_hops
@@ -212,6 +230,34 @@ class CoInferenceStepper:
         """One-shot input uplink cost (zero for device-only plans)."""
         return self.graph.input_bytes / bw_bps if partition > 0 else 0.0
 
+    def _edge_prefix(self, partition: int, qbw: float,
+                     edge_load: float) -> tuple:
+        """Per-exit accumulator snapshots after the edge-side terms of
+        :meth:`per_exit_times`' fold (io + cut + edge layers, in that
+        order), plus the input-uplink term.  The snapshot is independent of
+        ``device_load`` — the one continuous cache axis — so a fresh
+        device_load only replays the short device suffix instead of the
+        whole fold.  Replaying the suffix onto the snapshot reproduces the
+        full fold bit-identically (same terms, same order)."""
+        key = (partition, qbw, edge_load)
+        hit = self._prefix_cache.get(key)
+        if hit is None:
+            pe_all, _ = self._branch_preds()
+            graph, p = self.graph, partition
+            inp = graph.input_bytes / qbw if p > 0 else 0.0
+            base = []
+            for e in self.exit_points:
+                pe = pe_all[e - 1]
+                t = 0.0
+                if p > 0:
+                    t += graph.input_bytes / qbw
+                    t += graph.cut_bytes(e, p) / qbw
+                for j in range(min(p, len(pe))):
+                    t += pe[j] * edge_load
+                base.append(t)
+            hit = self._prefix_cache[key] = (base, inp)
+        return hit
+
     def per_exit_times_cached(self, partition: int, bw_bps: float, *,
                               edge_load: float = 1.0,
                               device_load: float = 1.0,
@@ -219,15 +265,27 @@ class CoInferenceStepper:
         """Memoized :meth:`per_exit_times` at quantized bandwidth — the fleet
         hot path: all inputs are piecewise-constant (traces change on a 1 s
         grid, loads are fixed per node), so devices in the same bandwidth
-        state share one evaluation."""
+        state share one evaluation.  Misses rebuild from the
+        :meth:`_edge_prefix` snapshot (device-suffix replay only) —
+        bit-identical to the full :meth:`per_exit_times` fold."""
         qbw = quantize_bw(bw_bps)
         key = (partition, qbw, edge_load, device_load, include_input)
         hit = self._step_cache.get(key)
         if hit is None:
             self.step_misses += 1
-            hit = self._step_cache[key] = self.per_exit_times(
-                partition, qbw, edge_load=edge_load,
-                device_load=device_load, include_input=include_input)
+            base, inp = self._edge_prefix(partition, qbw, edge_load)
+            _, pd_all = self._branch_preds()
+            p = partition
+            out = []
+            for i, e in enumerate(self.exit_points):
+                pd = pd_all[e - 1]
+                t = base[i]
+                for j in range(p, len(pd)):
+                    t += pd[j] * device_load
+                if not include_input and p > 0:
+                    t -= inp
+                out.append(t)
+            hit = self._step_cache[key] = out
         else:
             self.step_hits += 1
         return hit

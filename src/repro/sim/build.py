@@ -136,6 +136,12 @@ class Simulation:
     def build(self) -> Scenario:
         if self.scenario is not None:
             return self.scenario
+        if self.spec.topology.shards > 1:
+            raise ValueError(
+                f"spec {self.spec.name!r} is sharded (topology.shards="
+                f"{self.spec.topology.shards}): there is no single live "
+                "Scenario to build — Simulation.run() executes the tiles "
+                "and merges, or use repro.sim.shard.run_sharded directly")
         import time
         t_build0 = time.perf_counter()
         spec = self.spec
@@ -204,6 +210,12 @@ class Simulation:
         return sc
 
     def run(self) -> FleetMetrics:
+        if self.spec.topology.shards > 1:
+            # sharded geography: tiles run (sequentially here; pass
+            # processes= to run_sharded for parallelism) and merge on
+            # virtual-time keys — bit-identical either way
+            from repro.sim.shard import run_sharded
+            return run_sharded(self.spec)
         sc = self.build()
         metrics = sc.engine.run(sc.workload)
         # observers are read-only: saving artifacts after the run cannot

@@ -94,13 +94,22 @@ def main(argv: Optional[List[str]] = None) -> int:
     if overrides:
         spec = apply_overrides(spec, overrides)
 
-    sim = Simulation(spec)
-    metrics = sim.run().summary()
-    engine = sim.scenario.engine
     # events_processed lives OUTSIDE summary(): observers add "obs" events,
     # so it may differ observers-on vs off while summaries stay identical
-    events = {"processed": engine.events_processed,
-              "by_kind": dict(sorted(engine.event_counts.items()))}
+    if spec.topology.shards > 1:
+        # sharded geography: tiles run and merge (no single live engine);
+        # the merged info dict carries the fleet-wide event counts
+        from repro.sim.shard import run_sharded_info
+        m, info = run_sharded_info(spec)
+        metrics = m.summary()
+        events = {"processed": info["events_processed"],
+                  "by_kind": info["event_counts"]}
+    else:
+        sim = Simulation(spec)
+        metrics = sim.run().summary()
+        engine = sim.scenario.engine
+        events = {"processed": engine.events_processed,
+                  "by_kind": dict(sorted(engine.event_counts.items()))}
     if args.json:
         print(json.dumps({"scenario": spec.name, "spec": spec.to_dict(),
                           "metrics": metrics, "events": events},

@@ -90,6 +90,14 @@ class TopologySpec(_Spec):
     kind: str = "static"                 # "static" | "mobile"
     num_devices: int = 40
     num_edges: int = 4
+    # geography sharding (repro.sim.shard, docs/performance.md): > 1 splits
+    # the fleet into `shards` disjoint tiles (num_devices/num_edges must
+    # divide evenly), each an independent geography simulated by its own
+    # event loop — in parallel worker processes or sequentially in one —
+    # and merged into fleet-global metrics on virtual-time keys.  The spec
+    # *defines* the tiling, so sharded and unsharded executions of the same
+    # spec are bit-identical.
+    shards: int = 1
     edge_capacity: int = 8
     hetero_edges: bool = True
     max_edge_slowdown: float = 3.0
@@ -115,6 +123,13 @@ class TopologySpec(_Spec):
         if self.kind not in ("static", "mobile"):
             raise ValueError(f"unknown topology kind {self.kind!r}: "
                              "expected 'static' or 'mobile'")
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > 1 and (self.num_devices % self.shards
+                                or self.num_edges % self.shards):
+            raise ValueError(
+                f"shards={self.shards} must divide num_devices="
+                f"{self.num_devices} and num_edges={self.num_edges} evenly")
         self.device_slowdown_range = tuple(self.device_slowdown_range)
 
 

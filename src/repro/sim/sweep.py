@@ -77,6 +77,15 @@ def run_cell(spec: ScenarioSpec) -> Dict:
 
     from repro.sim.build import Simulation
     t0 = time.perf_counter()
+    if spec.topology.shards > 1:
+        # sharded cell: tiles run sequentially inside this worker (the
+        # sweep already owns the process-level parallelism)
+        from repro.sim.shard import run_sharded_info
+        metrics, info = run_sharded_info(spec)
+        return {"spec": spec.to_dict(), "metrics": metrics.summary(),
+                "events": {"processed": info["events_processed"],
+                           "by_kind": info["event_counts"]},
+                "wall_s": round(time.perf_counter() - t0, 3)}
     sim = Simulation(spec)
     metrics = sim.run().summary()
     engine = sim.scenario.engine

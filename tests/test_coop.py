@@ -259,3 +259,72 @@ def test_fleet_run_shares_plan_searches_across_devices():
     eng.run(wl)
     # many (device, arrival) pairs, far fewer quantized plan states
     assert 0 < len(eng.stepper.plan_cache) < len(wl) * 5
+
+
+# --------------------------------------------------------------------------
+# mobile pricing: decide() must price each candidate at its own primary
+# --------------------------------------------------------------------------
+
+def _asymmetric_mobile_fleet():
+    """One stationary device parked on a *slow* edge, with a *fast* edge far
+    away: best-signal pricing (the device link's rate, i.e. the nearest
+    edge's) makes the far edge's uplink look cheap and over-admits it."""
+    import numpy as np
+
+    from repro.fleet.cluster import DeviceNode, EdgeNode, FleetTopology
+    from repro.fleet.mobility import (MobileLink, MobilityModel, Trajectory,
+                                      edge_grid)
+    sc = build_stack(PlannerSpec())
+    pos = edge_grid(2)               # (0.25, 0.25) and (0.75, 0.25)
+    traj = Trajectory(np.zeros(1), np.array([[0.25, 0.25]]))
+    mob = MobilityModel(edge_pos=pos, trajectories=[traj], noise=None)
+    dev = DeviceNode(0, MobileLink(mob, 0), slowdown=2.0)
+    edges = [EdgeNode(0, capacity=4, speed=3.0),   # near, slow hardware
+             EdgeNode(1, capacity=4, speed=1.0)]   # far, fast hardware
+    topo = FleetTopology([dev], edges, edge_bw_bps=400 * 125e3)
+    eng = FleetEngine(topo, sc.graph, sc.planner, router="joint",
+                      mobility=mob, max_coop=1)
+    return eng, topo, dev
+
+
+def test_joint_decide_prices_per_primary_under_mobility():
+    """Regression for the joint-router bandwidth mispricing: decide() used
+    to price every candidate's uplink at the device link's best-signal
+    rate, systematically preferring a far fast edge whose real uplink is an
+    order of magnitude slower.  Per-primary pricing must pick a different
+    edge set here, and that choice must win on *realized* latency."""
+    import numpy as np
+    wl = make_workload(1, rate_hz=0.4, horizon_s=10.0, seed=5)
+
+    eng_fix, topo_fix, dev_fix = _asymmetric_mobile_fleet()
+    eng_bug, topo_bug, dev_bug = _asymmetric_mobile_fleet()
+    eng_bug.router.planner.mobility = None     # legacy best-signal pricing
+
+    req = wl[0]
+    dec_fix = eng_fix.router.planner.decide(req, dev_fix, topo_fix,
+                                            req.arrival_s)
+    dec_bug = eng_bug.router.planner.decide(req, dev_bug, topo_bug,
+                                            req.arrival_s)
+    # the mispricing is decision-changing: best-signal admits the far edge
+    assert dec_fix.assign.eids == (0,)
+    assert dec_bug.assign.eids == (1,)
+
+    m_fix = eng_fix.run(wl)
+    m_bug = eng_bug.run(wl)
+    lat_fix = float(np.mean([r.latency_s for r in m_fix.records]))
+    lat_bug = float(np.mean([r.latency_s for r in m_bug.records]))
+    assert lat_fix < lat_bug
+    # and the fixed run never serves from the far edge
+    assert {r.edge for r in m_fix.records} == {0}
+
+
+def test_joint_decide_mobile_matches_scalar_reference():
+    """The row-vectorized mobile decide() path must agree with the scalar
+    per-candidate reference on the asymmetric geometry."""
+    eng, topo, dev = _asymmetric_mobile_fleet()
+    planner = eng.router.planner
+    for req in make_workload(1, rate_hz=1.0, horizon_s=6.0, seed=9):
+        a = planner.decide(req, dev, topo, req.arrival_s)
+        b = planner.decide_scalar(req, dev, topo, req.arrival_s)
+        assert a.assign.eids == b.assign.eids
+        assert a.est_s == b.est_s and a.est_min_s == b.est_min_s

@@ -461,3 +461,52 @@ def test_sample_sweep_with_controller_but_no_engine_mobility():
                                                   policy="bocd"))
     m = eng.run(sc.workload)
     assert m.summary()["requests"] == len(sc.workload)
+
+
+def _congested_mobile_spec():
+    """smoke-mobility at capacity 1 and 3x the arrival rate: queues build
+    while devices move, so BOCD replans tombstone queued requests (the
+    workload test_tombstoned_queue_entry_is_skipped exercises in vitro)."""
+    from dataclasses import replace
+    base = get_scenario("smoke-mobility")
+    return replace(base, name="tombstone-compaction",
+                   topology=replace(base.topology, edge_capacity=1),
+                   workload=replace(base.workload, rate_per_device_hz=0.6,
+                                    horizon_s=15.0))
+
+
+def test_heap_compaction_fires_and_is_bit_identical():
+    """Satellite fix for unbounded tombstone-heap growth: with an
+    aggressive threshold every tombstone triggers a heap rebuild; with
+    compaction disabled the heap only ever grows.  Pop order is a total
+    order on (deadline, seq) either way, so summaries and the handover log
+    must not move by a single bit."""
+    spec = _congested_mobile_spec()
+    sc = Simulation(spec).build()
+
+    sc.engine.compact_ratio = 0.0          # compact on every tombstone
+    m_on = sc.engine.run(sc.workload)
+    assert sc.engine.tombstoned > 0        # the scenario genuinely queues
+    assert sc.engine.compactions > 0
+    compactions_on = sc.engine.compactions
+
+    sc.engine.compact_ratio = None         # lazy deletion only
+    m_off = sc.engine.run(sc.workload)
+    assert sc.engine.compactions == 0
+
+    assert m_on.summary() == m_off.summary()
+    assert m_on.handover_log == m_off.handover_log
+    assert compactions_on == sc.engine.tombstoned
+
+
+def test_default_compaction_threshold_matches_disabled():
+    """The shipping default (compact at 50% dead) is also bit-identical to
+    no compaction on the congested scenario."""
+    spec = _congested_mobile_spec()
+    sc = Simulation(spec).build()
+    assert sc.engine.compact_ratio == 0.5
+    m_def = sc.engine.run(sc.workload)
+    sc.engine.compact_ratio = None
+    m_off = sc.engine.run(sc.workload)
+    assert m_def.summary() == m_off.summary()
+    assert m_def.handover_log == m_off.handover_log

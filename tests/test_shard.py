@@ -1,0 +1,215 @@
+"""Geography sharding (repro.sim.shard) and the spatial nearest-edge grid.
+
+Two determinism contracts introduced by the 100k-device scaling work:
+
+* ``MobilityModel.nearest`` answers from a uniform spatial grid; it must be
+  *bit-identical* to the brute-force ``argmin`` over the distance row —
+  including the first-minimum tie-break — on random geographies, on exact
+  equidistant tie points, and under global id offsets (``eid0``/``did0``).
+* ``TopologySpec.shards = k`` defines the fleet as ``k`` disjoint geography
+  tiles.  However the tiles execute — ``Simulation(spec).run()``, a
+  sequential ``run_sharded``, or a spawn-pool ``processes=k`` run — the
+  merged summary and handover log are bit-identical.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.fleet.mobility import (MobilityModel, Trajectory, edge_grid,
+                                  make_mobile_fleet)
+from repro.sim import ScenarioSpec, Simulation, get_scenario
+from repro.sim.shard import (RID_STRIDE, run_sharded, run_sharded_info,
+                             tile_spec)
+
+
+def _resharded(name: str, *, shards: int, num_devices: int,
+               num_edges: int) -> ScenarioSpec:
+    base = get_scenario(name)
+    return dataclasses.replace(
+        base, topology=dataclasses.replace(
+            base.topology, shards=shards, num_devices=num_devices,
+            num_edges=num_edges))
+
+
+# ------------------------------------------------- spatial nearest-edge grid
+
+
+@pytest.mark.parametrize("num_edges", [1, 4, 7, 16, 100])
+def test_grid_matches_bruteforce_random_geographies(num_edges):
+    """Grid-accelerated nearest == argmin over the distance row, bitwise,
+    for every device at many timestamps, across grid shapes (including a
+    single-cell 1-edge grid and a non-square 7-edge one)."""
+    _, mob = make_mobile_fleet(30, num_edges, seed=num_edges,
+                               speed=0.4, horizon_s=20.0)
+    for did in range(30):
+        for t in np.linspace(0.0, 20.0, 9):
+            assert mob.nearest(did, float(t)) == \
+                mob.nearest_bruteforce(did, float(t))
+
+
+def test_grid_tie_break_is_first_minimum():
+    """Exactly equidistant edges must resolve to the lowest edge id — the
+    ``argmin`` first-minimum rule — even when the winner lives in a farther
+    grid ring than a higher-id candidate."""
+    pos = edge_grid(4)    # 2x2 grid: (0.25, 0.25) .. (0.75, 0.75), exact
+    parks = [
+        (0.5, 0.5),                  # equidistant center of all four edges
+        (0.5, 0.25),                 # equidistant between edges 0 and 1
+        (0.25, 0.25),                # on edge 0 exactly (distance 0)
+        (-3.0, 0.5),                 # far outside the grid bounding box
+        (0.0, 2.5),                  # outside, above the top-left corner
+    ]
+    trajs = [Trajectory(np.zeros(1), np.array([p])) for p in parks]
+    mob = MobilityModel(edge_pos=pos, trajectories=trajs, noise=None)
+    for did in range(len(parks)):
+        assert mob.nearest(did, 0.0) == mob.nearest_bruteforce(did, 0.0)
+    # the center point is genuinely tied four ways (the coordinates are
+    # exact binary floats); the winner must be the lowest edge id even
+    # though edge 0 sits in a farther grid ring than edge 3
+    d = [mob.distance(0, e, 0.0) for e in range(4)]
+    assert d[0] == d[1] == d[2] == d[3]
+    assert mob.nearest(0, 0.0) == 0
+
+
+def test_grid_respects_global_id_offsets():
+    """A tile's model (eid0/did0 offsets) answers in global edge ids and
+    still matches brute force."""
+    _, mob = make_mobile_fleet(10, 5, seed=11, speed=0.3, horizon_s=10.0,
+                               eid0=100, did0=5000)
+    for did in range(5000, 5010):
+        for t in (0.0, 3.7, 10.0):
+            near = mob.nearest(did, t)
+            assert near == mob.nearest_bruteforce(did, t)
+            assert 100 <= near < 105
+
+
+# ------------------------------------------------------- tile spec derivation
+
+
+def test_tile_specs_split_rate_and_namespaces():
+    spec = _resharded("smoke-mobility", shards=4, num_devices=80,
+                      num_edges=8)
+    fleet_rate = spec.workload.resolve_rate_hz(80)
+    tiles = [tile_spec(spec, g) for g in range(4)]
+    for g, t in enumerate(tiles):
+        assert t.topology.shards == 1
+        assert t.topology.num_devices == 20 and t.topology.num_edges == 2
+        assert t.seed != spec.seed or g == 0
+    assert sum(t.workload.resolve_rate_hz(t.topology.num_devices)
+               for t in tiles) == pytest.approx(fleet_rate)
+    assert len({t.seed for t in tiles}) == 4
+
+
+def test_sharded_ids_are_globally_disjoint():
+    """Per-tile request/device/edge ids land in disjoint global ranges."""
+    spec = _resharded("smoke-mobility", shards=4, num_devices=80,
+                      num_edges=8)
+    metrics = run_sharded(spec)
+    rids, devs, edges = set(), set(), set()
+    for r in metrics.records:
+        rids.add(r.rid)
+        devs.add(r.device)
+        if r.edge >= 0:
+            edges.add(r.edge)
+    tiles_hit = {rid // RID_STRIDE for rid in rids}
+    assert tiles_hit == {0, 1, 2, 3}
+    assert all(0 <= d < 80 for d in devs)
+    assert all(0 <= e < 8 for e in edges)
+    # block-diagonal reachability: a device's serving edge is in its tile
+    for r in metrics.records:
+        if r.edge >= 0:
+            assert r.edge // 2 == r.device // 20
+
+
+# ---------------------------------------------- sharded-vs-unsharded pins
+
+
+def _run_three_ways(spec):
+    a = Simulation(spec).run()
+    b, info = run_sharded_info(spec)
+    c = run_sharded(spec, processes=2)
+    return a, b, c, info
+
+
+@pytest.mark.parametrize("name,shards,nd,ne", [
+    ("smoke-lm", 2, 40, 4),           # static fleet, bandwidth-aware router
+    ("smoke-mobility", 4, 80, 8),     # mobile fleet, BOCD handovers
+    ("coop", 2, 40, 4),               # joint multi-edge planner
+])
+def test_sharded_execution_is_bit_identical(name, shards, nd, ne):
+    """``Simulation(spec).run()``, sequential ``run_sharded``, and a
+    spawn-pool ``processes=2`` run all produce the identical summary and
+    handover log for the same sharded spec."""
+    spec = _resharded(name, shards=shards, num_devices=nd, num_edges=ne)
+    a, b, c, info = _run_three_ways(spec)
+    assert a.summary() == b.summary() == c.summary()
+    assert a.handover_log == b.handover_log == c.handover_log
+    assert info["shards"] == shards
+    assert info["requests"] > 0
+    assert info["events_processed"] == \
+        sum(t["events_processed"] for t in info["tiles"])
+
+
+def test_sharded_rerun_determinism():
+    spec = _resharded("smoke-mobility", shards=4, num_devices=80,
+                      num_edges=8)
+    a = run_sharded(spec)
+    b = run_sharded(spec)
+    assert a.summary() == b.summary()
+    assert a.handover_log == b.handover_log
+
+
+# -------------------------------------------------------------- validation
+
+
+def test_shards_must_divide_fleet():
+    base = get_scenario("smoke-mobility")
+    with pytest.raises(ValueError, match="shards"):
+        dataclasses.replace(base, topology=dataclasses.replace(
+            base.topology, shards=3, num_devices=80, num_edges=8))
+    with pytest.raises(ValueError, match="shards"):
+        dataclasses.replace(base, topology=dataclasses.replace(
+            base.topology, shards=4, num_devices=80, num_edges=6))
+    with pytest.raises(ValueError, match="shards"):
+        dataclasses.replace(base, topology=dataclasses.replace(
+            base.topology, shards=0))
+
+
+def test_unsharded_spec_rejected_by_run_sharded():
+    with pytest.raises(ValueError, match="nothing to shard"):
+        run_sharded(get_scenario("smoke-mobility"))
+
+
+def test_sharded_spec_rejects_observers_and_build():
+    spec = _resharded("smoke-mobility", shards=4, num_devices=80,
+                      num_edges=8)
+    traced = dataclasses.replace(spec, engine=dataclasses.replace(
+        spec.engine, trace="/tmp/never-written.json"))
+    with pytest.raises(ValueError, match="trace"):
+        run_sharded(traced)
+    with pytest.raises(ValueError, match="no single live Scenario"):
+        Simulation(spec).build()
+
+
+# ------------------------------------------------------------- scale smoke
+
+
+@pytest.mark.perf
+def test_sharded_scale_smoke():
+    """Scale smoke (marked perf): a 400-device mobility fleet across 8
+    geography tiles, sequential vs spawn-pool execution — the CI perf leg's
+    sharded equivalence cell."""
+    base = get_scenario("smoke-mobility")
+    spec = dataclasses.replace(
+        base,
+        topology=dataclasses.replace(base.topology, shards=8,
+                                     num_devices=400, num_edges=8),
+        workload=dataclasses.replace(base.workload, horizon_s=15.0),
+        engine=dataclasses.replace(base.engine, retain_records=False))
+    seq, info = run_sharded_info(spec)
+    par = run_sharded(spec, processes=4)
+    assert seq.summary() == par.summary()
+    assert info["shards"] == 8 and len(info["tiles"]) == 8
+    assert info["events_processed"] > 0
+    assert seq.summary()["requests"] == info["requests"]

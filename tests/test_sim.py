@@ -277,3 +277,18 @@ def test_json_round_trip_rebuilds_identical_metrics(name):
     assert len(a.records) == len(b.records)
     assert a.summary() == b.summary()
     assert a.handover_log == b.handover_log
+
+
+def test_cli_runs_sharded_spec(capsys):
+    """Regression: a sharded spec has no single live engine — the CLI must
+    report the merged event counts from the tile infos instead."""
+    rc = sim_main(["--scenario", "smoke-lm", "--json",
+                   "--set", "topology.num_devices=20",
+                   "--set", "topology.num_edges=4",
+                   "--set", "topology.shards=2",
+                   "--set", "workload.horizon_s=4.0"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["spec"]["topology"]["shards"] == 2
+    assert payload["metrics"]["requests"] > 0
+    assert payload["events"]["processed"] > 0
