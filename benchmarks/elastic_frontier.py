@@ -1,0 +1,84 @@
+"""Cost-vs-SLO frontier benchmark for elastic edges (docs/elastic.md).
+
+Sweeps the registered ``elastic-diurnal`` scenario over autoscaler
+provisioning knobs (``max_slots`` ceiling, ``up_backlog_s`` aggressiveness)
+and prints the Pareto frontier of ``cost_usd`` (slot-hours billed at the
+autoscaler's ``usd_per_slot_hour``) against ``slo_attainment`` — the
+capacity-planning curve a fixed-capacity fleet cannot produce: every point
+is a provisioning policy, non-dominated on (cheaper, better SLO).
+
+Every cell is an independent ``repro.sim`` spec, so any row reproduces with
+``python -m repro.sim --spec`` on its embedded spec; ``--jsonl`` /
+``--frontier`` dump the raw rows and the frontier subset.  The same sweep
+runs from the shell as::
+
+    PYTHONPATH=src python -m repro.sim.sweep --scenario elastic-diurnal \\
+        --grid autoscale.max_slots=[1,2,4,8,16] \\
+        --grid autoscale.up_backlog_s=[0.25,1.0] \\
+        --out sweep.jsonl --frontier frontier.jsonl
+
+Run:  PYTHONPATH=src python benchmarks/elastic_frontier.py
+      PYTHONPATH=src python benchmarks/elastic_frontier.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.sim import get_scenario
+from repro.sim.sweep import grid_cells, pareto_frontier, run_sweep
+
+MAX_SLOTS = (1, 2, 4, 8, 16)
+UP_BACKLOG_S = (0.25, 1.0)
+SMOKE_MAX_SLOTS = (1, 4, 16)     # --smoke: 3 cells, still >= 3 frontier pts
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-cell grid on the shorter elastic-smoke scenario "
+                         "(the CI leg)")
+    ap.add_argument("--processes", type=int, default=1,
+                    help="worker processes across cells (1 = inline)")
+    ap.add_argument("--jsonl", metavar="FILE",
+                    help="stream all {spec, metrics} rows to a JSONL file")
+    ap.add_argument("--frontier", metavar="FILE",
+                    help="write the non-dominated rows to a JSONL file")
+    args = ap.parse_args()
+
+    if args.smoke:
+        base = get_scenario("elastic-smoke")
+        axes = {"autoscale.max_slots": list(SMOKE_MAX_SLOTS)}
+    else:
+        base = get_scenario("elastic-diurnal")
+        axes = {"autoscale.max_slots": list(MAX_SLOTS),
+                "autoscale.up_backlog_s": list(UP_BACKLOG_S)}
+    cells = grid_cells(base, axes)
+    rows = run_sweep(cells, out_path=args.jsonl, processes=args.processes)
+    front = pareto_frontier(rows)
+
+    hdr = (f"{'max_slots':>9} {'up_blg_s':>8} {'cost_usd':>9} "
+           f"{'slo':>7} {'reject%':>8} {'scales':>6} {'front':>5}")
+    print(f"\n{base.name}: cost-vs-SLO frontier over "
+          f"{len(rows)} provisioning cells")
+    print(hdr)
+    print("-" * len(hdr))
+    front_ids = {id(r) for r in front}
+    for r in rows:
+        a, m = r["spec"]["autoscale"], r["metrics"]
+        print(f"{a['max_slots']:>9} {a['up_backlog_s']:>8.2f} "
+              f"{m['cost_usd']:>9.4f} {m['slo_attainment']:>7.4f} "
+              f"{100 * m['reject_rate']:>7.2f}% {m['scale_events']:>6} "
+              f"{'  *' if id(r) in front_ids else '':>5}")
+    print(f"\n{len(front)} non-dominated points "
+          f"(* above, sorted output in --frontier)")
+    if args.frontier:
+        with open(args.frontier, "w") as f:
+            for r in front:
+                f.write(json.dumps(r, sort_keys=True, default=float) + "\n")
+        print(f"frontier -> {args.frontier}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

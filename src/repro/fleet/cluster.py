@@ -50,7 +50,7 @@ class _SoA:
     delegate their hot attributes here."""
 
     __slots__ = ("tokens_owed", "ema_round_s", "coop_inflight", "backlog_n",
-                 "dev_busy_until_s", "edge_cap_div")
+                 "dev_busy_until_s", "capacity", "edge_cap_div")
 
     def __init__(self, num_edges: int, num_devices: int,
                  capacities: np.ndarray):
@@ -62,8 +62,13 @@ class _SoA:
         # integer row instead of walking edge objects
         self.backlog_n = np.zeros(num_edges, np.int64)
         self.dev_busy_until_s = np.zeros(num_devices)
+        # *live* provisioned decode slots per edge: static unless an
+        # Autoscaler (fleet.elastic) drives `scale` events through the
+        # engine, which mutate this via the EdgeNode.capacity setter
+        self.capacity = np.asarray(capacities, np.int64).copy()
         # float64 of max(capacity, 1): integer-valued, so dividing by it is
-        # bit-identical to the scalar ``/ max(e.capacity, 1)``
+        # bit-identical to the scalar ``/ max(e.capacity, 1)``; kept in
+        # lock-step with `capacity` by the setter
         self.edge_cap_div = np.maximum(capacities, 1).astype(float)
 
 
@@ -190,6 +195,31 @@ class EdgeNode:
         return per_round * self.tokens_owed / max(self.capacity, 1)
 
 
+def _edge_capacity_get(self) -> int:
+    s = getattr(self, "_soa", None)
+    return int(s.capacity[self._idx]) if s is not None else self._cap
+
+
+def _edge_capacity_set(self, v: int) -> None:
+    # Runs once from the generated dataclass __init__ (before _soa exists:
+    # getattr fallback) and thereafter from the engine's `scale` events.
+    # edge_cap_div tracks max(capacity, 1) so the vectorized backlog row
+    # stays bit-identical to the scalar backlog_s().
+    s = getattr(self, "_soa", None)
+    if s is not None:
+        s.capacity[self._idx] = v
+        s.edge_cap_div[self._idx] = float(max(v, 1))
+    else:
+        self._cap = int(v)
+
+
+# Attached after class creation so the dataclass keeps `capacity: int = 8`
+# in its __init__ signature while reads/writes route into the SoA column
+# once the topology binds the node (same pattern as the in-class hot-state
+# properties; those can live in the body because they have no field).
+EdgeNode.capacity = property(_edge_capacity_get, _edge_capacity_set)
+
+
 @dataclass
 class FleetTopology:
     devices: List[DeviceNode]
@@ -216,8 +246,8 @@ class FleetTopology:
         # hashable speed tuple for plan/step cache keys (routers key on the
         # immutable inputs, never on topology object identity)
         self.speed_key = tuple(self.edge_speed.tolist())
-        self.edge_capacity = np.array([e.capacity for e in edges], np.int64)
-        soa = _SoA(len(edges), len(devices), self.edge_capacity)
+        caps = np.array([e.capacity for e in edges], np.int64)
+        soa = _SoA(len(edges), len(devices), caps)
         for i, e in enumerate(edges):
             soa.tokens_owed[i] = e.tokens_owed
             soa.ema_round_s[i] = e.ema_round_s
@@ -227,6 +257,11 @@ class FleetTopology:
             soa.dev_busy_until_s[i] = d.busy_until_s
             d._soa, d._idx = soa, i
         self._soa = soa
+        # live view of provisioned slots (scale events mutate it in place)
+        # plus the provisioned-at-build snapshot the engine resets from at
+        # the start of each autoscaled run
+        self.edge_capacity = soa.capacity
+        self.base_capacity = caps
 
     @property
     def num_devices(self) -> int:

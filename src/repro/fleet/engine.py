@@ -65,8 +65,18 @@ class FleetEngine:
                  replan_max_coop: int = 1, max_coop: int = 3,
                  retain_records: bool = True,
                  compact_ratio: Optional[float] = 0.5,
+                 autoscaler=None, admission=None,
                  tracer=None, timeline=None, profiler=None):
         self.topo = topo
+        # elasticity (fleet.elastic, docs/elastic.md): an Autoscaler drives
+        # `scale` events that resize per-edge capacity (scale-down drains —
+        # busy slots are never reclaimed); an AdmissionControl sheds
+        # arrivals at saturated edges (reject or device-only fallback).
+        # Both None (the default) leaves every code path byte-identical to
+        # the pre-elasticity engine (golden-pinned).
+        self.autoscaler = autoscaler
+        self.admission = admission
+        self._cap_target = {}          # eid -> pending drain target
         # EDF-heap tombstone compaction threshold (None disables); see
         # _maybe_compact.  Summaries are bit-identical either way.
         self.compact_ratio = compact_ratio
@@ -122,7 +132,7 @@ class FleetEngine:
             # raises ValueError (with the known names) on a bad one
             router = make_router(router, stepper=self.stepper, topo=topo,
                                  max_coop=max_coop, prefill_div=prefill_div,
-                                 mobility=mobility)
+                                 mobility=mobility, admission=admission)
         self.router = router
         # hop/span timelines are memoized on the *stepper* (fleet-wide: all
         # engines sharing the stepper share the entries), keyed on exit,
@@ -164,6 +174,26 @@ class FleetEngine:
         self.compactions = 0
         for dev in self.topo.devices:
             dev.busy_until_s = 0.0
+        elastic = self.autoscaler is not None or self.admission is not None
+        if elastic:
+            metrics.elastic = True
+            self._cap_target = {}
+            if self.autoscaler is not None:
+                # rerunnable engines: capacity restarts from the
+                # provisioned-at-build snapshot, not wherever the previous
+                # run's autoscaler left it
+                soa = self.topo._soa
+                soa.capacity[:] = self.topo.base_capacity
+                soa.edge_cap_div[:] = np.maximum(
+                    self.topo.base_capacity, 1).astype(float)
+                self.autoscaler.reset()
+                metrics.usd_per_slot_hour = self.autoscaler.usd_per_slot_hour
+                if workload:
+                    evq.push(self.autoscaler.decide_dt, "scale", None)
+            # the price model integrates *live* capacity from t=0, so the
+            # timeline opens for every edge even if it never changes
+            for edge in self.topo.edges:
+                metrics.mark_capacity(edge.eid, edge.capacity, 0.0)
         for req in workload:               # same: a workload list is reusable
             req.edge, req.admitted_s = -1, None
             req.assign = None
@@ -219,10 +249,14 @@ class FleetEngine:
                 self._on_sample_sweep(evq, metrics)
             elif kind == "handover":
                 self._on_handover(ev.payload, evq, metrics)
+            elif kind == "scale":
+                self._on_scale(evq, metrics)
             elif kind == "obs":
                 self._on_obs(evq)
             if prof is not None:
                 prof.add(kind, time.perf_counter() - t0, len(evq))
+        if elastic:
+            metrics.finalize_capacity()
         return metrics
 
     # ------------------------------------------------------------ bandwidth
@@ -278,6 +312,12 @@ class FleetEngine:
                     if req.plan.partition == 0:
                         self._run_local(req, device, bw_serve, evq)
                         return
+        if self.admission is not None and self.admission.saturated(edge):
+            # per-cell admission control: the placed edge is full.  (Joint
+            # routing already masks saturated primaries — this is the
+            # engine-level backstop for placement-only routers.)
+            self._admission_deny(req, device, bw, evq, metrics)
+            return
         req.edge = edge.eid
         if tr is not None:
             tr.instant("plan", evq.now, tr.PID_DEVICES, req.device, args={
@@ -455,6 +495,16 @@ class FleetEngine:
                 still_active.append(req)
         edge.active = still_active
         edge.round_inflight = False
+        if self.autoscaler is not None:
+            # scale-down drain: reclaim provisioned slots as requests retire
+            # (capacity never drops below the running batch)
+            tgt = self._cap_target.get(edge.eid)
+            if tgt is not None:
+                cap = max(tgt, len(edge.active))
+                if cap < edge.capacity:
+                    self._set_capacity(edge, cap, now, metrics)
+                if cap == tgt:
+                    del self._cap_target[edge.eid]
         self._begin_round(edge, evq, metrics)
 
     # ---------------------------------------------------------------- rounds
@@ -462,8 +512,14 @@ class FleetEngine:
                      metrics: FleetMetrics):
         now = evq.now
         # admit in EDF order up to the batch width (continuous batching:
-        # this happens at every round boundary, not at batch completion)
-        while edge.queue and len(edge.active) < edge.capacity:
+        # this happens at every round boundary, not at batch completion).
+        # While a scale-down is draining, admission is capped at the drain
+        # *target*, not the still-provisioned width — otherwise sustained
+        # load would refill reclaimed slots and the drain never completes.
+        limit = edge.capacity
+        if self.autoscaler is not None:
+            limit = min(limit, self._cap_target.get(edge.eid, limit))
+        while edge.queue and len(edge.active) < limit:
             req = heapq.heappop(edge.queue)[2]
             if req is None:                # tombstoned by a replan
                 edge.q_dead -= 1
@@ -606,6 +662,106 @@ class FleetEngine:
         # edge_busy_s would double-bill utilization
         for eid, span_s in zip(eff.eids[1:], spans[1:]):
             metrics.add_coop_busy(eid, span_s)
+
+    # ---------------------------------------------------------------- elastic
+    def _set_capacity(self, edge: EdgeNode, new: int, now: float,
+                      metrics: FleetMetrics):
+        """Resize one edge's provisioned slot count: bill the closed
+        capacity segment into the price model and log the change."""
+        old = edge.capacity
+        if new == old:
+            return
+        metrics.on_scale(edge.eid, old, new, now)
+        edge.capacity = new
+        if self.tracer is not None:
+            self.tracer.counter("capacity", now, edge.eid,
+                                {"capacity": new})
+
+    def _on_scale(self, evq: EventQueue, metrics: FleetMetrics):
+        """One tick of the autoscaling grid: apply this slot's (edge,
+        target) decisions.  Scale-up takes effect immediately (and kicks a
+        round if work was waiting on slots); scale-down provisions down to
+        ``max(target, running batch)`` now and drains the rest at round
+        boundaries (see _on_round_done) — busy slots are never reclaimed.
+        The grid self-terminates with the workload, like sample/obs."""
+        now = evq.now
+        for eid, target in self.autoscaler.decide(now, self.topo):
+            edge = self.topo.edge(eid)
+            cur = edge.capacity
+            self._cap_target.pop(eid, None)   # a fresh decision supersedes
+            if target == cur:
+                continue
+            provision = max(target, len(edge.active))
+            if target < provision:
+                self._cap_target[eid] = target
+            self._set_capacity(edge, provision, now, metrics)
+            if target < cur:
+                self._replan_shrunk(edge, target, now, evq, metrics)
+            elif provision > cur and not edge.round_inflight \
+                    and len(edge.queue) - edge.q_dead > 0:
+                self._begin_round(edge, evq, metrics)
+        if self._pending > 0:
+            evq.push(now + self.autoscaler.decide_dt, "scale", None)
+
+    def _replan_shrunk(self, edge: EdgeNode, target: int, now: float,
+                       evq: EventQueue, metrics: FleetMetrics):
+        """A scale-down changed the edge's effective speed-per-slot: re-price
+        the (partition, exit) plans of its queued, un-prefilled, single-edge
+        requests through the autoscaler's
+        :class:`~repro.runtime.elastic.ElasticPlanner` (calibrated on the
+        fleet's latency models) at each request's own bandwidth.  A plan
+        that collapses to partition 0 pushes the request back to its device
+        — the elastic analogue of the mobility queue-replan fallback.
+        Cooperative requests keep their plans (their span assignment is
+        bound to the partition) and prefilled ones hold edge state."""
+        planner = getattr(self.autoscaler, "planner", None)
+        if planner is None:
+            return
+        from repro.runtime.elastic import TierSpec
+        for entry in list(edge.queue):
+            req = entry[2]
+            if req is None or not req.prefill_pending or req.migrating \
+                    or req.assign is not None:
+                continue
+            device = self.topo.device(req.device)
+            bw = self._bw(device, edge.eid, now)
+            plan = planner.plan_for(TierSpec(chips=target), TierSpec(chips=1),
+                                    link_bps=bw)
+            if plan.partition == 0:
+                self._dequeue(edge, req)
+                if self.tracer is not None:
+                    self.tracer.async_end("queue", req.rid, now,
+                                          self.tracer.PID_DEVICES,
+                                          req.device)
+                edge.tokens_owed -= req.max_new_tokens - req.tokens_done
+                req.plan, req.assign, req.edge = plan, None, -1
+                self._untrack(req)
+                self._run_local(req, device, device.link.bw_at(now), evq)
+            else:
+                req.plan = plan
+
+    def _admission_deny(self, req: FleetRequest, device, bw: float,
+                        evq: EventQueue, metrics: FleetMetrics):
+        """Shed one arrival at a saturated edge.  ``policy='local'``
+        degrades to device-only execution (the request still completes);
+        ``policy='reject'`` counts an explicit rejected outcome — the
+        request leaves the system, conserving
+        ``completed + rejected + in_flight == issued``."""
+        now = evq.now
+        if self.admission.policy == "local":
+            req.plan = self.stepper.plan_multi(
+                bw, (), device_load=device.slowdown)
+            req.assign = None
+            self._run_local(req, device, bw, evq)
+            return
+        self._pending -= 1
+        metrics.reject()
+        if self.tracer is not None:
+            tr = self.tracer
+            tr.instant("reject", now, tr.PID_DEVICES, req.device,
+                       args={"rid": req.rid, "tenant": req.tenant})
+            tr.async_end("request", req.rid, now, tr.PID_DEVICES,
+                         req.device, args={"rejected": True})
 
     # ---------------------------------------------------------------- handover
     def _untrack(self, req: FleetRequest):

@@ -52,12 +52,21 @@ class JointPlanner:
     bandwidths, and an explicit migration surcharge)."""
 
     def __init__(self, stepper, topo: FleetTopology, *, max_coop: int = 3,
-                 prefill_div: int = 8, mobility=None):
+                 prefill_div: int = 8, mobility=None, admission=None):
         self.stepper = stepper
         self.topo = topo
         self.max_coop = max(1, max_coop)
         self.prefill_div = prefill_div
         self.mobility = mobility
+        # admission control (fleet.elastic.AdmissionControl, optional):
+        # candidates whose *primary* is saturated are priced at +inf in
+        # every decide path, so the search steers to less-loaded cells or
+        # the device-only fallback before the engine's backstop rejects.
+        # None (the default) skips the mask entirely — decisions are
+        # bit-identical to the pre-admission planner.  replan() is left
+        # unmasked: an in-flight request already holds its slot, and the
+        # backlog terms it prices already penalize full cells.
+        self.admission = admission
         self._sets = self._candidate_sets(topo)
         self._ordered_sets_cache = {}
         # decide() hot path: per (quantized bw, device slowdown) the plans,
@@ -239,6 +248,14 @@ class JointPlanner:
             tab["t_exit"] * req.max_new_tokens
         est_min = base + tab["t_exit"] * prefill_steps + \
             tab["t_min"] * req.max_new_tokens
+        if self.admission is not None:
+            # saturated primaries are unroutable: +inf drops them from the
+            # feasible set and the fallback argmin alike (the device-only
+            # candidate always keeps a finite estimate)
+            sat = self.admission.saturated_row(topo)
+            mask = ~tab["local"] & sat[tab["primary"]]
+            est = np.where(mask, np.inf, est)
+            est_min = np.where(mask, np.inf, est_min)
         feasible = np.flatnonzero(est <= req.deadline_s - now)
         if len(feasible):
             # max accuracy, then min estimate, then lowest eids (rank):
@@ -297,6 +314,9 @@ class JointPlanner:
             est = base + prefill + \
                 per_exit[plan.exit_point - 1] * req.max_new_tokens
             est_min = base + prefill + per_exit[0] * req.max_new_tokens
+            if self.admission is not None and plan.partition != 0 \
+                    and self.admission.saturated(topo.edge(assign.eids[0])):
+                est = est_min = float("inf")
             cands.append(JointDecision(plan=plan, assign=assign,
                                        est_s=est, est_min_s=est_min))
         slack = req.deadline_s - now
@@ -355,6 +375,10 @@ class JointPlanner:
             est = base + prefill + \
                 per_exit[plan.exit_point - 1] * req.max_new_tokens
             est_min = base + prefill + per_exit[0] * req.max_new_tokens
+            if self.admission is not None and plan.partition != 0 \
+                    and self.admission.saturated(topo.edge(assign.eids[0])):
+                # the vectorized path's saturation mask, scalar form
+                est = est_min = float("inf")
             if (plan.partition == 0) == (len(cand) == 0):
                 # keep one canonical device-only candidate (the empty set);
                 # a non-empty set whose plan collapsed to partition 0 is a

@@ -73,6 +73,20 @@ class FleetMetrics:
     # for bit-identical summaries.
     finish_keys: List[float] = field(default_factory=list)
     handover_at: List[float] = field(default_factory=list)
+    # ---- elasticity (fleet.elastic, docs/elastic.md).  ``elastic`` is set
+    # by the engine when an autoscaler or admission policy is attached; the
+    # elastic summary keys (rejected / cost / scale counts) are emitted only
+    # then, so summaries of non-elastic runs stay bit-identical to the
+    # pre-elasticity schema (golden-pinned by tests/test_elastic.py).
+    elastic: bool = False
+    usd_per_slot_hour: float = 0.0
+    # integral of provisioned capacity per edge (slot-seconds): summed from
+    # the piecewise-constant capacity timeline at every change point
+    slot_s: Dict[int, float] = field(default_factory=dict)
+    # scale-event log: (virtual time, eid, old slots, new slots) — retained
+    # like handover_log; ``scale_at`` carries the shard-merge keys
+    capacity_log: List[tuple] = field(default_factory=list)
+    scale_at: List[float] = field(default_factory=list)
 
     def __post_init__(self):
         # ---- running aggregates (the only inputs summary() reads), all
@@ -94,6 +108,13 @@ class FleetMetrics:
         self._tenant_met = r.family("tenant_requests_met_slo")
         self._handovers = r.counter("handovers")
         self._migrated = r.counter("migrated_bytes")
+        # elasticity instruments are registered unconditionally (zero-cost
+        # when idle) so merged() folds them through the same registry loop;
+        # summary() only *emits* them when self.elastic
+        self._rejected = r.counter("rejected")
+        self._scales = r.counter("scale_events")
+        # last capacity change point per edge: (virtual time, slots)
+        self._cap_mark: Dict[int, tuple] = {}
 
     def record(self, rec: RequestRecord):
         """Fold one completed request into the running aggregates (and
@@ -145,6 +166,45 @@ class FleetMetrics:
             self.handover_log.append((round(t_s, 9), src, dst, nbytes))
             self.handover_at.append(t_s if at_s is None else at_s)
 
+    # ---------------------------------------------------------- elasticity
+    def reject(self):
+        """Count one shed arrival (admission policy 'reject'): an explicit
+        outcome, never a silent drop — conservation is
+        ``completed + rejected + in_flight == issued``."""
+        self._rejected.inc()
+
+    def mark_capacity(self, eid: int, cap: int, t_s: float):
+        """Open the capacity timeline of an edge (engine: once per run at
+        t=0 with the provisioned-at-build slot count)."""
+        self._cap_mark[eid] = (t_s, cap)
+        self.slot_s.setdefault(eid, 0.0)
+
+    def on_scale(self, eid: int, old: int, new: int, t_s: float):
+        """One capacity change point: bill the closed piecewise-constant
+        segment into ``slot_s`` and log the event.  Segments are billed
+        per edge in event order, so the integral is exactly reconstructable
+        from ``capacity_log`` (tests/test_elastic.py pins float equality)."""
+        t0, cap = self._cap_mark[eid]
+        self.slot_s[eid] += cap * (t_s - t0)
+        self._cap_mark[eid] = (t_s, new)
+        self._scales.inc()
+        if self.retain_records:
+            self.capacity_log.append((round(t_s, 9), eid, old, new))
+            self.scale_at.append(t_s)
+
+    def finalize_capacity(self):
+        """Close every edge's capacity timeline at the run horizon (engine:
+        once after the event loop drains).  Idempotent per run end."""
+        for eid in sorted(self._cap_mark):
+            t0, cap = self._cap_mark[eid]
+            end = max(self.horizon_s, t0)
+            self.slot_s[eid] += cap * (end - t0)
+            self._cap_mark[eid] = (end, cap)
+
+    @property
+    def rejected_count(self) -> int:
+        return self._rejected.value
+
     # ------------------------------------------------------------ sharding
     @classmethod
     def merged(cls, parts: List["FleetMetrics"],
@@ -182,6 +242,21 @@ class FleetMetrics:
         for k, pi, j in hrows:
             out.handover_log.append(parts[pi].handover_log[j])
             out.handover_at.append(k)
+        # elasticity: tile-disjoint per-edge slot integrals insert plainly;
+        # the scale-event log merges on its append keys like handover_log
+        out.elastic = any(p.elastic for p in parts)
+        out.usd_per_slot_hour = max(
+            (p.usd_per_slot_hour for p in parts), default=0.0)
+        srows = []
+        for pi, p in enumerate(parts):
+            srows.extend((k, pi, j) for j, k in enumerate(p.scale_at))
+        srows.sort(key=lambda r: (r[0], r[1]))
+        for k, pi, j in srows:
+            out.capacity_log.append(parts[pi].capacity_log[j])
+            out.scale_at.append(k)
+        for p in parts:
+            for eid, v in p.slot_s.items():
+                out.slot_s[eid] = out.slot_s.get(eid, 0.0) + v
         for p in parts:
             out.horizon_s = max(out.horizon_s, p.horizon_s)
             out.transfer_events += p.transfer_events
@@ -228,7 +303,7 @@ class FleetMetrics:
         horizon = max(self.horizon_s, 1e-9)
         util = {eid: round(self.edge_busy_s.get(eid, 0.0) / horizon, 6)
                 for eid in range(self.num_edges)}
-        return {
+        out = {
             "requests": n,
             "coop_requests": self._coop.value,
             "handovers": self._handovers.value,
@@ -252,3 +327,20 @@ class FleetMetrics:
             "exit_histogram": self._exits.as_dict(),
             "partition_histogram": self._parts.as_dict(),
         }
+        if self.elastic:
+            # schema-complete at every request count — including the
+            # all-rejected run: n == 0 keeps percentiles/means at None
+            # above (the zero-request convention) while the reject path
+            # still reports exactly what happened.  Emitted only for
+            # elastic runs so non-elastic summaries keep the pre-elastic
+            # key set bit-identically.
+            rej = self._rejected.value
+            issued = n + rej
+            slot_hours = sum(
+                v for _, v in sorted(self.slot_s.items())) / 3600.0
+            out["rejected"] = rej
+            out["reject_rate"] = rej / issued if issued else 0.0
+            out["scale_events"] = self._scales.value
+            out["slot_hours"] = slot_hours
+            out["cost_usd"] = self.usd_per_slot_hour * slot_hours
+        return out

@@ -156,11 +156,16 @@ ROUTER_ALIASES = {
 
 def make_router(name: str, stepper=None, topo=None,
                 max_coop: int = 3, prefill_div: int = 8,
-                mobility=None) -> Router:
+                mobility=None, admission=None) -> Router:
     """Router registry (docs/fleet.md has the policy table): resolves the
     policy names accepted by ``FleetEngine(router=...)``,
     ``repro.sim.RouterSpec``, and the benchmarks' ``--router`` flags.
-    Unknown names and missing dependencies raise ``ValueError``."""
+    Unknown names and missing dependencies raise ``ValueError``.
+
+    ``admission`` (a :class:`~repro.fleet.elastic.AdmissionControl`) is
+    consulted only by joint routing: the planner masks saturated primaries
+    so the search steers around full cells; placement-only routers rely on
+    the engine's admission backstop instead."""
     canon = ROUTER_ALIASES.get(name)
     if canon is None:
         raise ValueError(f"unknown router {name!r}: expected one of "
@@ -197,4 +202,4 @@ def make_router(name: str, stepper=None, topo=None,
     # over-admits far edges under mobility (docs/fleet.md)
     return JointRouter(JointPlanner(stepper, topo, max_coop=max_coop,
                                     prefill_div=prefill_div,
-                                    mobility=mobility))
+                                    mobility=mobility, admission=admission))

@@ -16,9 +16,9 @@ bit-identical with the timeline on or off (pinned by tests/test_obs.py).
 
 Columns per sample: ``t`` (virtual s), per-edge gauges
 (:data:`EDGE_GAUGES`: backlog seconds, tokens owed, busy/queued slot
-counts, cooperative in-flight spans, cumulative busy seconds, completions
-— the admission state of every edge) and, when device signals were
-available, :data:`DEVICE_SIGNALS`.  The buffers are rings: past
+counts, cooperative in-flight spans, cumulative busy seconds, completions,
+provisioned capacity — the admission/autoscaling state of every edge) and,
+when device signals were available, :data:`DEVICE_SIGNALS`.  The buffers are rings: past
 ``capacity`` samples the oldest rows are overwritten (``n`` keeps the
 total ever taken).  ``to_jsonl`` writes a self-describing header line plus
 one JSON object per retained sample; :func:`load_timeline` reads that back
@@ -34,7 +34,7 @@ import numpy as np
 __all__ = ["DEVICE_SIGNALS", "EDGE_GAUGES", "Timeline", "load_timeline"]
 
 EDGE_GAUGES = ("backlog_s", "tokens_owed", "active", "queued",
-               "coop_inflight", "busy_s", "completed")
+               "coop_inflight", "busy_s", "completed", "capacity")
 DEVICE_SIGNALS = ("bw_bps", "run_len")
 
 
@@ -83,6 +83,7 @@ class Timeline:
             eg["coop_inflight"][i, k] = e.coop_inflight
             eg["busy_s"][i, k] = e.busy_s
             eg["completed"][i, k] = e.completed
+            eg["capacity"][i, k] = e.capacity
         if self.device:
             if bw_row is not None:
                 self.device["bw_bps"][i] = bw_row

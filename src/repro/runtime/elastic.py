@@ -5,6 +5,13 @@ Two levers, both Edgent-native:
   RooflineLatencyModel when chips join/leave a tier;
 * training — the data-parallel degree changes; batch is re-sharded and the
   step re-jitted for the surviving mesh (dry-run-validated re-mesh).
+
+The fleet simulator reuses this for autoscaled edges
+(:mod:`repro.fleet.elastic`): an :class:`ElasticPlanner` built with the
+fleet's *calibrated* latency models (``f_edge``/``f_dev`` + ``ref_chips``)
+re-prices queued requests' plans when a scale-down changes an edge's
+effective speed-per-slot, at the request's own link bandwidth
+(``plan_for(..., link_bps=...)``).
 """
 from __future__ import annotations
 
@@ -13,7 +20,8 @@ from typing import Optional, Tuple
 
 import jax
 
-from repro.core.latency_model import RooflineLatencyModel
+from repro.core.latency_model import (RooflineLatencyModel,
+                                      ScaledLatencyModel)
 from repro.core.partitioner import CoInferencePlan, optimize_with_fallback
 
 
@@ -25,20 +33,51 @@ class TierSpec:
 
 @dataclass
 class ElasticPlanner:
-    """Re-derive co-inference plans as tier sizes change."""
+    """Re-derive co-inference plans as tier sizes change.
+
+    Two calibration modes:
+    * default — per-tier :class:`RooflineLatencyModel` built from each
+      :class:`TierSpec`'s (chips, efficiency);
+    * explicit — ``f_edge``/``f_dev`` are pre-calibrated per-layer latency
+      models (e.g. the fleet's rescaled rooflines) priced for ``ref_chips``
+      edge slots; tier sizes then *re-scale* them, so halving the chips
+      doubles the per-layer time on the identical cost surface the original
+      planner optimized over.
+    """
     graph: object
     latency_req_s: float
     link_bps: float
+    f_edge: object = None
+    f_dev: object = None
+    ref_chips: int = 1
 
-    def plan_for(self, edge: TierSpec, device: TierSpec) -> CoInferencePlan:
-        f_edge = RooflineLatencyModel(chips=edge.chips, efficiency=edge.efficiency)
-        f_dev = RooflineLatencyModel(chips=device.chips, efficiency=device.efficiency)
-        return optimize_with_fallback(self.graph, f_edge, f_dev,
-                                      self.link_bps, self.latency_req_s)
+    def _models(self, edge: TierSpec, device: TierSpec):
+        if self.f_edge is not None:
+            f_edge = ScaledLatencyModel(
+                self.f_edge, self.ref_chips / max(1, edge.chips))
+        else:
+            f_edge = RooflineLatencyModel(chips=edge.chips,
+                                          efficiency=edge.efficiency)
+        if self.f_dev is not None:
+            f_dev = self.f_dev if device.chips <= 1 else \
+                ScaledLatencyModel(self.f_dev, 1.0 / device.chips)
+        else:
+            f_dev = RooflineLatencyModel(chips=device.chips,
+                                         efficiency=device.efficiency)
+        return f_edge, f_dev
+
+    def plan_for(self, edge: TierSpec, device: TierSpec, *,
+                 link_bps: Optional[float] = None) -> CoInferencePlan:
+        f_edge, f_dev = self._models(edge, device)
+        return optimize_with_fallback(
+            self.graph, f_edge, f_dev,
+            self.link_bps if link_bps is None else link_bps,
+            self.latency_req_s)
 
     def shrink_event(self, edge: TierSpec, device: TierSpec,
                      lost_chips: int) -> Tuple[CoInferencePlan, TierSpec]:
-        """A failure removed chips from the edge tier: re-plan."""
+        """A failure removed chips from the edge tier: re-plan.  The tier
+        never shrinks below one chip (clamped), so a plan always exists."""
         new_edge = TierSpec(max(1, edge.chips - lost_chips), edge.efficiency)
         return self.plan_for(new_edge, device), new_edge
 

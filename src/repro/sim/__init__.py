@@ -18,9 +18,10 @@ from repro.sim.build import (Scenario, Simulation, build_stack,  # noqa: F401
                              build_topology)
 from repro.sim.registry import (STREAMING_TENANTS, get_scenario,  # noqa: F401
                                 list_scenarios, register_scenario)
-from repro.sim.spec import (DerivedSeeds, EngineSpec,  # noqa: F401
+from repro.sim.spec import (AdmissionSpec, AutoscaleSpec,  # noqa: F401
+                            DerivedSeeds, EngineSpec,
                             MobilitySpec, PlannerSpec, RouterSpec,
                             ScenarioSpec, TopologySpec, WorkloadSpec,
                             apply_overrides)
-from repro.sim.sweep import (grid_cells, random_cells,  # noqa: F401
-                             run_sweep)
+from repro.sim.sweep import (grid_cells, pareto_frontier,  # noqa: F401
+                             random_cells, run_sweep)

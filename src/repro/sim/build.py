@@ -185,6 +185,13 @@ class Simulation:
                     f"unknown engine dtype {spec.engine.dtype!r}: expected "
                     "a jax.numpy dtype name such as 'float32' or "
                     "'bfloat16'") from None
+        autoscaler = admission = None
+        if spec.autoscale is not None or spec.admission is not None:
+            from repro.fleet.elastic import build_elasticity
+            autoscaler, admission = build_elasticity(
+                spec.autoscale, spec.admission, graph=sc.graph,
+                planner=sc.planner, latency_req_s=spec.planner.latency_req_s,
+                ref_chips=spec.topology.edge_capacity)
         tracer = timeline = None
         if spec.engine.trace is not None:
             from repro.obs.trace import Tracer
@@ -202,7 +209,8 @@ class Simulation:
             handover=handover, replan_max_coop=spec.engine.replan_max_coop,
             max_coop=spec.router.max_coop,
             retain_records=spec.engine.retain_records,
-            tracer=tracer, timeline=timeline)
+            tracer=tracer, timeline=timeline,
+            autoscaler=autoscaler, admission=admission)
         sc.topo, sc.mobility, sc.handover = topo, mobility, handover
         sc.workload, sc.engine = workload, engine
         self.build_s = time.perf_counter() - t_build0

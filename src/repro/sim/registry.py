@@ -11,14 +11,21 @@ without corrupting the preset.  Built-ins:
 * ``smoke-mobility`` — 40 mobile devices random-waypoint over a 4-edge
   geography, streaming tenants, nearest-edge routing, BOCD handover: the
   ``--mobility --smoke`` cell.
+* ``elastic-smoke``   — the smoke-lm fleet shrunk to 4 base slots per edge
+  with threshold autoscaling and a reject-at-saturation admission gate: the
+  CI elasticity cell (docs/elastic.md).
+* ``elastic-diurnal`` — a longer-horizon diurnal workload against elastic
+  edges: the base spec the cost-vs-SLO frontier sweeps perturb
+  (``repro.sim.sweep --frontier``).
 """
 from __future__ import annotations
 
 from typing import Callable, Dict, List
 
 from repro.fleet.workload import TenantClass
-from repro.sim.spec import (MobilitySpec, PlannerSpec, RouterSpec,
-                            ScenarioSpec, TopologySpec, WorkloadSpec)
+from repro.sim.spec import (AdmissionSpec, AutoscaleSpec, MobilitySpec,
+                            PlannerSpec, RouterSpec, ScenarioSpec,
+                            TopologySpec, WorkloadSpec)
 
 __all__ = ["get_scenario", "list_scenarios", "register_scenario",
            "STREAMING_TENANTS"]
@@ -97,3 +104,38 @@ register_scenario("smoke-mobility", lambda: ScenarioSpec(
                           device_skew=0.5, tenants=STREAMING_TENANTS),
     router=RouterSpec(name="nearest"),
     mobility=MobilitySpec(policy="bocd")))
+
+
+def _elastic(name: str, description: str, *, horizon_s: float,
+             max_slots: int, peak_factor: float) -> ScenarioSpec:
+    # capacity-bound by construction: streaming tenants (decode up to 128
+    # tokens, so one slot is held for whole seconds) against a 2-slot base
+    # — the diurnal peak genuinely forces the autoscaler's hand, and the
+    # admission gate fires whenever provisioned capacity lags the ramp
+    return ScenarioSpec(
+        name=name, description=description, seed=2,
+        topology=TopologySpec(num_devices=40, num_edges=4, edge_capacity=2,
+                              lo_mbps=0.1, hi_mbps=6.0,
+                              max_edge_slowdown=4.0),
+        workload=WorkloadSpec(rate_per_device_hz=2.0, horizon_s=horizon_s,
+                              arrival="diurnal", device_skew=1.0,
+                              peak_factor=peak_factor,
+                              tenants=STREAMING_TENANTS),
+        router=RouterSpec(name="bandwidth-aware"),
+        autoscale=AutoscaleSpec(min_slots=1, max_slots=max_slots,
+                                decide_dt=0.5, up_backlog_s=0.5,
+                                down_util=0.25, cooldown_s=1.0),
+        admission=AdmissionSpec(policy="reject", max_queue=2))
+
+
+register_scenario("elastic-smoke", lambda: _elastic(
+    "elastic-smoke",
+    "smoke-lm fleet on 4-slot elastic edges: threshold autoscaling plus a "
+    "reject-at-saturation admission gate (the CI elasticity cell)",
+    horizon_s=30.0, max_slots=8, peak_factor=2.0))
+
+register_scenario("elastic-diurnal", lambda: _elastic(
+    "elastic-diurnal",
+    "longer diurnal workload against elastic edges — the base spec the "
+    "cost-vs-SLO frontier sweeps perturb (repro.sim.sweep --frontier)",
+    horizon_s=60.0, max_slots=12, peak_factor=3.0))

@@ -133,6 +133,13 @@ def run_tile(spec: ScenarioSpec, g: int) -> Tuple[FleetMetrics, Dict]:
     if tspec.engine.dtype is not None:
         import jax.numpy as jnp
         dtype = getattr(jnp, tspec.engine.dtype)
+    autoscaler = admission = None
+    if tspec.autoscale is not None or tspec.admission is not None:
+        from repro.fleet.elastic import build_elasticity
+        autoscaler, admission = build_elasticity(
+            tspec.autoscale, tspec.admission, graph=sc.graph,
+            planner=sc.planner, latency_req_s=tspec.planner.latency_req_s,
+            ref_chips=t.edge_capacity)
     engine = FleetEngine(
         topo, sc.graph, sc.planner, router=tspec.router.name,
         model=sc.model, params=sc.params, dynamic=tspec.engine.dynamic,
@@ -141,7 +148,8 @@ def run_tile(spec: ScenarioSpec, g: int) -> Tuple[FleetMetrics, Dict]:
         prefill_div=tspec.engine.prefill_div, mobility=mobility,
         handover=handover, replan_max_coop=tspec.engine.replan_max_coop,
         max_coop=tspec.router.max_coop,
-        retain_records=tspec.engine.retain_records)
+        retain_records=tspec.engine.retain_records,
+        autoscaler=autoscaler, admission=admission)
     metrics = engine.run(workload)
     info = {"tile": g, "shards": k,
             "events_processed": engine.events_processed,

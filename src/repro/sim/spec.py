@@ -28,9 +28,9 @@ from repro.fleet.router import ROUTER_ALIASES
 from repro.fleet.workload import DEFAULT_TENANTS, TenantClass
 
 __all__ = [
-    "DerivedSeeds", "EngineSpec", "MobilitySpec", "PlannerSpec",
-    "RouterSpec", "ScenarioSpec", "TopologySpec", "WorkloadSpec",
-    "apply_overrides",
+    "AdmissionSpec", "AutoscaleSpec", "DerivedSeeds", "EngineSpec",
+    "MobilitySpec", "PlannerSpec", "RouterSpec", "ScenarioSpec",
+    "TopologySpec", "WorkloadSpec", "apply_overrides",
 ]
 
 
@@ -187,6 +187,64 @@ class MobilitySpec(_Spec):
 
 
 @dataclass
+class AutoscaleSpec(_Spec):
+    """Elastic per-edge capacity (``fleet.elastic.Autoscaler``, docs/
+    elastic.md): a threshold policy run on the engine's ``scale`` event
+    grid every ``decide_dt`` virtual seconds.  Capacity starts at
+    ``TopologySpec.edge_capacity``, scales up by ``step`` slots when an
+    edge's backlog exceeds ``up_backlog_s`` seconds, and drains down by
+    ``step`` when its queue is empty and the batch fills at most
+    ``down_util`` of the provisioned slots, always within
+    [``min_slots``, ``max_slots``].  Provisioned slots cost
+    ``usd_per_slot_hour`` — the ``cost_usd`` axis of the frontier sweeps.
+    ``replan_on_shrink`` re-prices queued requests' plans through
+    ``runtime.elastic.ElasticPlanner`` after a scale-down."""
+    min_slots: int = 1
+    max_slots: int = 16
+    decide_dt: float = 1.0
+    up_backlog_s: float = 1.0
+    down_util: float = 0.25
+    step: int = 1
+    cooldown_s: float = 0.0
+    usd_per_slot_hour: float = 1.0
+    replan_on_shrink: bool = True
+
+    def __post_init__(self):
+        # mirrors fleet.elastic.Autoscaler validation so a bad spec fails
+        # at parse time, not mid-build
+        if self.min_slots < 1:
+            raise ValueError(f"min_slots must be >= 1, got {self.min_slots}")
+        if self.max_slots < self.min_slots:
+            raise ValueError(
+                f"max_slots ({self.max_slots}) must be >= min_slots "
+                f"({self.min_slots})")
+        if self.decide_dt <= 0:
+            raise ValueError(
+                f"decide_dt must be positive, got {self.decide_dt}")
+        if self.step < 1:
+            raise ValueError(f"step must be >= 1, got {self.step}")
+
+
+@dataclass
+class AdmissionSpec(_Spec):
+    """Per-cell admission control (``fleet.elastic.AdmissionControl``): an
+    edge is saturated once queued + batched requests reach
+    ``capacity + max_queue``; saturated arrivals are shed — rejected
+    outright (``policy='reject'``, counted in ``summary()['rejected']``) or
+    degraded to device-only execution (``policy='local'``)."""
+    policy: str = "reject"               # "reject" | "local"
+    max_queue: int = 0
+
+    def __post_init__(self):
+        if self.policy not in ("reject", "local"):
+            raise ValueError(
+                f"unknown admission policy {self.policy!r}: expected "
+                "'reject' or 'local'")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+
+
+@dataclass
 class PlannerSpec(_Spec):
     """The model stack the Edgent planner optimizes over: a smoke-scale LM
     graph with roofline predictors rescaled so one device-only decode step
@@ -262,10 +320,15 @@ class ScenarioSpec(_Spec):
     router: RouterSpec = field(default_factory=RouterSpec)
     engine: EngineSpec = field(default_factory=EngineSpec)
     mobility: Optional[MobilitySpec] = None
+    # elasticity (docs/elastic.md): both default to None — the spec-level
+    # off switch that keeps summaries bit-identical to pre-elastic runs
+    autoscale: Optional[AutoscaleSpec] = None
+    admission: Optional[AdmissionSpec] = None
 
     _NESTED = {"planner": PlannerSpec, "topology": TopologySpec,
                "workload": WorkloadSpec, "router": RouterSpec,
-               "engine": EngineSpec, "mobility": MobilitySpec}
+               "engine": EngineSpec, "mobility": MobilitySpec,
+               "autoscale": AutoscaleSpec, "admission": AdmissionSpec}
 
     def seeds(self) -> DerivedSeeds:
         """The one place per-subsystem seeds come from (see module
@@ -298,9 +361,11 @@ def apply_overrides(spec: ScenarioSpec,
                     assignments: Dict[str, object]) -> ScenarioSpec:
     """Return a new spec with dotted-path overrides applied, e.g.
     ``{"topology.num_devices": 100, "router.name": "joint"}`` — the engine
-    behind the CLI's ``--set``.  Overriding into ``mobility`` when it is
-    unset materializes a default :class:`MobilitySpec` first.  Unknown
-    paths raise ``ValueError`` (the same strict check as ``from_dict``)."""
+    behind the CLI's ``--set``.  Overriding into an unset optional section
+    (``mobility``, ``autoscale``, ``admission``) materializes that
+    section's default spec first, so ``--set autoscale.max_slots=8`` both
+    enables autoscaling and tunes it.  Unknown paths raise ``ValueError``
+    (the same strict check as ``from_dict``)."""
     d = spec.to_dict()
     for path, value in assignments.items():
         parts = path.split(".")
@@ -309,8 +374,8 @@ def apply_overrides(spec: ScenarioSpec,
             if p not in cur:
                 raise ValueError(f"unknown spec path {path!r} "
                                  f"(no field {p!r})")
-            if cur[p] is None and p == "mobility":
-                cur[p] = MobilitySpec().to_dict()
+            if cur[p] is None and p in ScenarioSpec._NESTED:
+                cur[p] = ScenarioSpec._NESTED[p]().to_dict()
             if not isinstance(cur[p], dict):
                 raise ValueError(f"spec path {path!r} descends into "
                                  f"non-spec field {p!r}")

@@ -35,7 +35,8 @@ import numpy as np
 from repro.sim.registry import get_scenario
 from repro.sim.spec import ScenarioSpec, apply_overrides
 
-__all__ = ["grid_cells", "random_cells", "run_cell", "run_sweep", "main"]
+__all__ = ["grid_cells", "pareto_frontier", "random_cells", "run_cell",
+           "run_sweep", "main"]
 
 
 def grid_cells(base: ScenarioSpec,
@@ -142,6 +143,30 @@ def run_sweep(cells: Iterable[ScenarioSpec], *,
     return rows  # type: ignore[return-value]
 
 
+def pareto_frontier(rows: Sequence[Dict], *, x: str = "cost_usd",
+                    y: str = "slo_attainment") -> List[Dict]:
+    """Non-dominated sweep rows on (minimize ``metrics[x]``, maximize
+    ``metrics[y]``), sorted by ``x`` ascending — the cost-vs-SLO frontier of
+    an elastic sweep (docs/elastic.md).  A row survives iff no other row is
+    at least as good on both axes and strictly better on one; rows missing
+    either metric (e.g. cells run without elasticity, so no ``cost_usd``)
+    are excluded.  Exact ties on both axes all survive, so the result is
+    deterministic in the row set, not the row order."""
+    pts = [r for r in rows
+           if r is not None and r["metrics"].get(x) is not None
+           and r["metrics"].get(y) is not None]
+    front = []
+    for r in pts:
+        rx, ry = r["metrics"][x], r["metrics"][y]
+        dominated = any(
+            (o["metrics"][x] <= rx and o["metrics"][y] >= ry)
+            and (o["metrics"][x] < rx or o["metrics"][y] > ry)
+            for o in pts)
+        if not dominated:
+            front.append(r)
+    return sorted(front, key=lambda r: (r["metrics"][x], -r["metrics"][y]))
+
+
 def _parse_axis(pair: str) -> tuple:
     if "=" not in pair:
         raise ValueError(f"--grid expects PATH=JSON_LIST, got {pair!r}")
@@ -179,6 +204,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="JSONL output path ({spec, metrics} per row)")
     ap.add_argument("--processes", type=int, default=1,
                     help="worker processes across cells (1 = inline)")
+    ap.add_argument("--frontier", metavar="FILE",
+                    help="additionally write the cost-vs-SLO Pareto "
+                         "frontier (non-dominated rows on cost_usd vs "
+                         "slo_attainment) as JSONL")
     args = ap.parse_args(argv)
 
     if (args.scenario is None) == (args.spec is None):
@@ -199,6 +228,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     rows = run_sweep(cells, out_path=args.out, processes=args.processes,
                      progress=True)
     print(f"{len(rows)} cells -> {args.out}")
+    if args.frontier:
+        front = pareto_frontier(rows)
+        with open(args.frontier, "w") as f:
+            for row in front:
+                f.write(json.dumps(row, sort_keys=True, default=float)
+                        + "\n")
+        for row in front:
+            m = row["metrics"]
+            print(f"  frontier: cost_usd={m['cost_usd']:.4f} "
+                  f"slo={m['slo_attainment']:.4f} "
+                  f"reject_rate={m.get('reject_rate', 0.0):.4f}")
+        print(f"{len(front)} non-dominated cells -> {args.frontier}")
     return 0
 
 

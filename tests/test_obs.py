@@ -324,6 +324,7 @@ def test_timeline_ring_overwrites_oldest():
         coop_inflight = 0
         busy_s = 0.0
         completed = 0
+        capacity = 8
 
         def backlog_s(self):
             return 0.0
