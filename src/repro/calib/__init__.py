@@ -1,0 +1,27 @@
+"""Measure -> fit -> validate: the sim-to-real calibration loop
+(docs/calibration.md).
+
+The paper's planner quality rests on profiled per-layer latency
+regressions (Table I); our fleet simulator normally runs on analytic
+roofline models instead.  This package closes that gap on the real jax
+kernels in three stages:
+
+* :mod:`repro.calib.measure` — time per-layer / per-exit prefill and
+  decode (warmup + ``block_until_ready``, median-of-k) over batch and
+  sequence sweeps, emitting a serializable :class:`CalibrationTable`;
+* :mod:`repro.calib.fit` — fit the paper-style per-layer-type regressions
+  from a table and re-parameterize the planner
+  (``core.latency_model.RegressionLatencyModel``) or an
+  ``runtime.elastic.ElasticPlanner`` from the fit;
+* :mod:`repro.calib.validate` — run one scenario on analytic vs calibrated
+  models and report per-layer / per-exit error (signed bias + MAPE) and the
+  plan-divergence rate over the scenario's bandwidth range.
+
+``python -m repro.calib {measure,fit,validate}`` drives the loop from the
+shell; ``ScenarioSpec.calibration`` points a scenario at a fitted table.
+"""
+from repro.calib.fit import (FittedLatencyModel, elastic_planner_from_table,  # noqa: F401
+                             fit_table, models_from_table)
+from repro.calib.measure import measure_alexnet, measure_lm  # noqa: F401
+from repro.calib.table import CalibrationTable, TimingSample  # noqa: F401
+from repro.calib.validate import validate_scenario  # noqa: F401

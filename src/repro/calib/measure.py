@@ -1,0 +1,164 @@
+"""Time the real kernels: the measurement stage of the calibration loop.
+
+Two targets, one artifact:
+
+* :func:`measure_lm` — the smoke-scale LM stack a
+  :class:`~repro.sim.spec.PlannerSpec` describes: per-exit decode steps
+  through the *same* compiled variants the fleet's batched real-decode path
+  runs (``CoInferenceStepper.decode_fn`` / ``decode_fn_batched``), swept
+  over batch sizes and prompt lengths, plus prefill and exit-head samples.
+* :func:`measure_alexnet` — the paper's branchy-AlexNet prototype at
+  Table-I layer granularity (``core.profiler.profile_all_branches``).
+
+Every sample is warmup + ``jax.block_until_ready`` + median-of-k
+(``time.perf_counter``), recorded as a :class:`~repro.calib.table
+.TimingSample` in a :class:`~repro.calib.table.CalibrationTable`.
+Measurements are host wall clock — the one intentionally
+non-deterministic corner of the repo; everything downstream (fit,
+validate) is deterministic in the table.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.calib.table import CalibrationTable, TimingSample
+
+__all__ = ["measure_alexnet", "measure_lm"]
+
+
+def _median_time(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def measure_lm(spec=None, *, arch: Optional[str] = None,
+               batches: Sequence[int] = (1, 2, 4),
+               seqs: Sequence[int] = (8,), reps: int = 5,
+               warmup: int = 2) -> CalibrationTable:
+    """Measure the LM decode/prefill/head kernels of ``spec`` (a
+    ``PlannerSpec``; ``arch=`` shorthand builds one).
+
+    Decode samples run through the fleet's own compiled paths — the serial
+    per-exit variant at B=1 and the vmapped batched variant above — so the
+    table calibrates exactly what ``real_decode=True`` scenarios execute.
+    The position axis rides on ``seqs``: each prompt length measures decode
+    at a different KV offset."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serving.engine import CoInferenceStepper
+    from repro.sim.build import build_stack
+    from repro.sim.spec import PlannerSpec
+
+    if spec is None:
+        spec = PlannerSpec() if arch is None else PlannerSpec(arch=arch)
+    sc = build_stack(spec, with_model=True)
+    model, params, graph = sc.model, sc.params, sc.graph
+    stepper = CoInferenceStepper(model, graph, sc.planner)
+    rng = np.random.default_rng(0)
+    samples = []
+    pf_jit = jax.jit(model.prefill)
+
+    def prefill_rows(batch: int, seq: int):
+        """``batch`` independent B=1 (cache, token) rows after a real
+        prefill of ``seq`` random tokens — the fleet's request state."""
+        rows = []
+        for _ in range(batch):
+            toks = jnp.asarray(
+                rng.integers(0, sc.cfg.vocab_size, (1, seq)), jnp.int32)
+            cache = model.init_cache(1, seq + 4, dtype=jnp.float32,
+                                     enc_len=seq)
+            h, cache = pf_jit(params, toks, cache)
+            logits = model.logits(params, h)
+            tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+            rows.append((cache, tok))
+        return rows
+
+    tree = jax.tree_util.tree_map
+    for seq in seqs:
+        # ---- prefill: one [B, S] forward per (batch, seq)
+        for b in batches:
+            toks = jnp.asarray(
+                rng.integers(0, sc.cfg.vocab_size, (b, seq)), jnp.int32)
+            cache = model.init_cache(b, seq + 4, dtype=jnp.float32,
+                                     enc_len=seq)
+            t = _median_time(pf_jit, params, toks, cache,
+                             reps=reps, warmup=warmup)
+            samples.append(TimingSample(
+                phase="prefill", latency_s=t, batch=b, seq=seq, reps=reps))
+        # ---- decode: per exit x batch, at KV position `seq`
+        for e in stepper.exit_points:
+            for b in batches:
+                rows = prefill_rows(b, seq)
+                pos = jnp.asarray([seq] * b, jnp.int32)
+                if b == 1:
+                    fn = stepper.decode_fn(e)
+                    cache, tok = rows[0]
+                    t = _median_time(fn, params, cache, tok, pos[0],
+                                     reps=reps, warmup=warmup)
+                else:
+                    fn = stepper.decode_fn_batched(e, b)
+                    cb = tree(lambda *xs: jnp.stack(xs),
+                              *[r[0] for r in rows])
+                    tb = jnp.stack([r[1] for r in rows])
+                    t = _median_time(fn, params, cb, tb, pos,
+                                     reps=reps, warmup=warmup)
+                samples.append(TimingSample(
+                    phase="decode", latency_s=t, exit_point=e, batch=b,
+                    seq=seq, reps=reps))
+    # ---- exit head: the logits projection every exit pays once per token
+    d = sc.cfg.d_model
+    head_jit = jax.jit(model.logits)
+    for b in batches:
+        h = jnp.zeros((b, 1, d), jnp.float32)
+        t = _median_time(head_jit, params, h, reps=reps, warmup=warmup)
+        samples.append(TimingSample(
+            phase="head", kind="fc", latency_s=t, batch=b, seq=1, reps=reps,
+            features={"in_size": float(b * d * 2),
+                      "out_size": float(b * sc.cfg.vocab_size * 2)}))
+    return CalibrationTable(
+        arch=spec.arch, source="measure_lm", samples=samples,
+        meta={"reps": reps, "warmup": warmup, "batches": list(batches),
+              "seqs": list(seqs), "platform": jax.devices()[0].platform,
+              "num_exits": stepper.n_graph,
+              "edge_step_s": spec.edge_step_s,
+              "device_step_s": spec.device_step_s})
+
+
+def measure_alexnet(*, reps: int = 3, smoke: bool = True) -> CalibrationTable:
+    """Measure the branchy-AlexNet prototype layer by layer — the paper's
+    own granularity (Table I kinds, one sample per unique layer across all
+    five branches).  ``smoke`` is accepted for CLI symmetry; the config is
+    already CIFAR-10 scale."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_alexnet_config
+    from repro.core.graph import alexnet_graph
+    from repro.core.profiler import profile_all_branches
+    from repro.models.alexnet import BranchyAlexNet
+
+    cfg = get_alexnet_config()
+    net = BranchyAlexNet(cfg)
+    params = net.init(jax.random.key(0))
+    graph = alexnet_graph(net)
+    x = jnp.zeros((1, cfg.image_size, cfg.image_size, cfg.channels),
+                  jnp.float32)
+    profiles = profile_all_branches(graph, params, x, repeats=reps)
+    samples = [TimingSample(phase="layer", kind=p.kind,
+                            features=dict(p.features), latency_s=p.latency_s,
+                            reps=reps)
+               for p in profiles]
+    return CalibrationTable(
+        arch=cfg.name, source="measure_alexnet", samples=samples,
+        meta={"reps": reps, "smoke": bool(smoke),
+              "platform": jax.devices()[0].platform,
+              "num_exits": net.num_exits})

@@ -66,7 +66,8 @@ class FleetEngine:
                  retain_records: bool = True,
                  compact_ratio: Optional[float] = 0.5,
                  autoscaler=None, admission=None,
-                 tracer=None, timeline=None, profiler=None):
+                 tracer=None, timeline=None, profiler=None,
+                 batch_decode: bool = True, shard_decode: bool = False):
         self.topo = topo
         # elasticity (fleet.elastic, docs/elastic.md): an Autoscaler drives
         # `scale` events that resize per-edge capacity (scale-down drains —
@@ -93,6 +94,15 @@ class FleetEngine:
         self.profiler = profiler
         self.model, self.params = model, params
         self.dtype = dtype
+        # real-decode execution strategy (docs/calibration.md): with
+        # batch_decode a round's co-located requests decode as vmapped
+        # groups — one compiled call per (exit, cache-geometry) group —
+        # instead of one call per request; shard_decode additionally
+        # shard_maps the group over the host's device mesh when one exists.
+        # Token values are bit-identical either way (tests/test_calib.py);
+        # virtual timing never depends on these flags.
+        self.batch_decode = batch_decode
+        self.shard_decode = shard_decode
         self.demote = demote_on_deadline
         self.prefill_div = prefill_div
         # retain_records=False keeps FleetMetrics to its running aggregates
@@ -545,6 +555,7 @@ class FleetEngine:
             return
         tr = self.tracer
         round_dt = 0.0
+        decode_batch = []          # this round's real-decode group
         for slot, req in enumerate(edge.active):
             device = self.topo.device(req.device)
             bw = self._bw(device, edge.eid, now)
@@ -598,8 +609,13 @@ class FleetEngine:
             if req.assign is not None and req.assign.k > 1:
                 self._emit_hops(req, now, evq, metrics)
             if self.model is not None:
-                self._decode_real(req)
+                # token values are produced after the slot loop: the whole
+                # round decodes as one batched group (exit choices above are
+                # already fixed, so collecting first changes nothing)
+                decode_batch.append(req)
             round_dt = max(round_dt, t_step)
+        if decode_batch:
+            self._decode_real_batch(decode_batch)
         edge.busy_s += round_dt
         metrics.add_busy(edge.eid, round_dt)
         edge.ema_round_s = round_dt if edge.ema_round_s == 0.0 else \
@@ -976,6 +992,29 @@ class FleetEngine:
         fn = self.stepper.decode_fn(req.exit_point)
         pos = jnp.asarray(req.prompt_len + req.tokens_done, jnp.int32)
         h, req.cache = fn(self.params, req.cache, req.next_tok, pos)
+        self.stepper.serial_tokens += 1
         logits = self.model.logits(self.params, h)
         req.next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
         req.tokens.append(int(req.next_tok[0, 0]))
+
+    def _decode_real_batch(self, reqs: List[FleetRequest]):
+        """One decode round's token step for every active request at an
+        edge: the stepper groups congruent requests into vmapped calls
+        (``CoInferenceStepper.decode_step_batch``), then the logits/argmax
+        epilogue runs per request exactly as the serial path does — token
+        streams are bit-identical to per-request decode."""
+        if not self.batch_decode or len(reqs) == 1:
+            for req in reqs:
+                self._decode_real(req)
+            return
+        import jax.numpy as jnp
+        items = [(req.exit_point, req.cache, req.next_tok,
+                  req.prompt_len + req.tokens_done) for req in reqs]
+        outs = self.stepper.decode_step_batch(self.params, items,
+                                              sharded=self.shard_decode)
+        for req, (h, cache) in zip(reqs, outs):
+            req.cache = cache
+            logits = self.model.logits(self.params, h)
+            req.next_tok = jnp.argmax(logits[:, -1, :], -1) \
+                .astype(jnp.int32)[:, None]
+            req.tokens.append(int(req.next_tok[0, 0]))

@@ -20,8 +20,9 @@ comes from the latency models — deterministic and host-independent.
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,9 +105,13 @@ class CoInferenceStepper:
     ``model`` may be ``None`` for timing-only simulation (no real decode).
     """
 
+    #: default bound on compiled batched-decode variants (see ``jit_cache_max``)
+    JIT_CACHE_MAX = 32
+
     def __init__(self, model: Optional[Model], graph: InferenceGraph,
                  planner: EdgentPlanner, *, dynamic: bool = False,
-                 plan_cache: Optional[Dict[tuple, CoInferencePlan]] = None):
+                 plan_cache: Optional[Dict[tuple, CoInferencePlan]] = None,
+                 jit_cache_max: int = JIT_CACHE_MAX):
         self.model, self.graph, self.planner = model, graph, planner
         self.dynamic = dynamic
         # key: (quantized bw, edge-speed tuple[, quantized device slowdown,
@@ -130,6 +135,22 @@ class CoInferenceStepper:
         self.step_hits = self.step_misses = 0
         self.hop_hits = self.hop_misses = 0
         self._decode_jit: Dict[Optional[int], object] = {}
+        # batched decode (docs/calibration.md): compiled vmap variants keyed
+        # (model exit, batch bucket, sharded), LRU-bounded — a sweep over
+        # many batch widths must not accumulate unbounded compiled programs.
+        # The serial `_decode_jit` cache stays unbounded: it holds at most
+        # n_model + 1 entries by construction.
+        self._decode_vjit: "OrderedDict[tuple, object]" = OrderedDict()
+        self.jit_cache_max = max(1, jit_cache_max)
+        self.jit_hits = self.jit_misses = 0
+        # decode-path execution counters (asserted by tests/test_calib.py:
+        # a real-decode fleet round with co-located requests must land on
+        # the batched path)
+        self.batched_calls = 0        # jitted group calls issued
+        self.batched_tokens = 0       # tokens produced through vmap groups
+        self.serial_tokens = 0        # tokens produced one request at a time
+        self.padded_rows = 0          # bucket padding rows computed+discarded
+        self.batched_max = 0          # largest single vmap group seen
         self.n_graph = graph.num_exits
         self.n_model = model.num_segments if model is not None else graph.num_exits
         self.exit_points = list(range(1, self.n_graph + 1))
@@ -351,6 +372,18 @@ class CoInferenceStepper:
                           len(self._step_cache)),
             "hop": block(self.hop_hits, self.hop_misses,
                          len(self.hop_cache)),
+            # compiled decode variants: serial per-exit + LRU-bounded
+            # batched (exit, bucket) entries
+            "jit": dict(block(self.jit_hits, self.jit_misses,
+                              len(self._decode_jit) + len(self._decode_vjit)),
+                        max_entries=self.jit_cache_max),
+            # execution counters, not a hit/miss cache: how decode tokens
+            # actually ran (tests/test_calib.py pins the batched path)
+            "decode": {"batched_calls": self.batched_calls,
+                       "batched_tokens": self.batched_tokens,
+                       "serial_tokens": self.serial_tokens,
+                       "padded_rows": self.padded_rows,
+                       "batched_max": self.batched_max},
         }
 
     # ------------------------------------------------------------ decode path
@@ -364,12 +397,131 @@ class CoInferenceStepper:
         assert self.model is not None, "timing-only stepper has no decode path"
         mexit = None if graph_exit is None else self.to_model_exit(graph_exit)
         if mexit not in self._decode_jit:
+            self.jit_misses += 1
             ep = None if mexit is None or mexit >= self.n_model else mexit - 1
             fn = jax.jit(
                 lambda p, c, t, pos: self.model.decode_step(p, c, t, pos,
                                                             exit_point=ep)[:2])
             self._decode_jit[mexit] = fn
+        else:
+            self.jit_hits += 1
         return self._decode_jit[mexit]
+
+    # --------------------------------------------------------- batched decode
+    @staticmethod
+    def batch_bucket(n: int) -> int:
+        """Compiled batch widths come in power-of-two buckets: a group of
+        ``n`` co-located requests pads up to the bucket, so a continuous
+        batch whose width wobbles round to round reuses one compiled
+        variant per bucket instead of one per width."""
+        b = 1
+        while b < n:
+            b <<= 1
+        return b
+
+    def _shard_wrap(self, vstep, bucket: int):
+        """``shard_map`` the vmapped step over a 1-D device mesh when the
+        host has one (params replicated, the batch axis split).  On a
+        single-device host — or a bucket the mesh doesn't divide — this is
+        the identity: the plain vmap variant runs, bit-identically."""
+        devices = jax.devices()
+        if len(devices) <= 1 or bucket % len(devices) != 0:
+            return vstep
+        try:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec as P
+        except ImportError:                                # pragma: no cover
+            return vstep
+        mesh = Mesh(np.array(devices), ("b",))
+        return shard_map(vstep, mesh=mesh,
+                         in_specs=(P(), P("b"), P("b"), P("b")),
+                         out_specs=(P("b"), P("b")))
+
+    def decode_fn_batched(self, graph_exit: Optional[int], batch: int, *,
+                          sharded: bool = False):
+        """The compiled batched decode variant for ``graph_exit`` at
+        ``batch`` co-located requests: ``vmap`` of the per-request step over
+        stacked B=1 (cache, token, position) rows, jitted once per
+        ``(model exit, batch bucket)`` and held in an LRU of at most
+        ``jit_cache_max`` entries."""
+        assert self.model is not None, "timing-only stepper has no decode path"
+        mexit = None if graph_exit is None else self.to_model_exit(graph_exit)
+        key = (mexit, self.batch_bucket(batch), bool(sharded))
+        fn = self._decode_vjit.get(key)
+        if fn is None:
+            self.jit_misses += 1
+            ep = None if mexit is None or mexit >= self.n_model else mexit - 1
+            step = lambda p, c, t, pos: self.model.decode_step(  # noqa: E731
+                p, c, t, pos, exit_point=ep)[:2]
+            vstep = jax.vmap(step, in_axes=(None, 0, 0, 0))
+            if sharded:
+                vstep = self._shard_wrap(vstep, key[1])
+            fn = jax.jit(vstep)
+            self._decode_vjit[key] = fn
+            if len(self._decode_vjit) > self.jit_cache_max:
+                self._decode_vjit.popitem(last=False)     # evict LRU
+        else:
+            self.jit_hits += 1
+            self._decode_vjit.move_to_end(key)
+        return fn
+
+    @staticmethod
+    def _cache_sig(cache) -> tuple:
+        """Hashable shape/dtype signature of one request's decode cache.
+        Batched groups stack caches leaf-by-leaf, so only requests whose
+        caches are congruent (same tenant geometry: prompt + budget sizing)
+        may share a vmap call."""
+        return tuple((tuple(leaf.shape), str(leaf.dtype))
+                     for leaf in jax.tree_util.tree_leaves(cache))
+
+    def decode_step_batch(self, params, items: Sequence[tuple], *,
+                          sharded: bool = False) -> List[Tuple[object, object]]:
+        """One decode step for many co-located requests in as few compiled
+        calls as the cache geometry allows.
+
+        ``items`` rows are ``(graph_exit, cache, next_tok, pos)`` with B=1
+        leaves (``pos`` a python int).  Rows are grouped by (exit, cache
+        signature); each group is stacked, padded up to its power-of-two
+        bucket by replicating row 0 (vmap rows are independent, so padding
+        changes nothing but FLOPs — the discard is counted in
+        ``padded_rows``), and run through :meth:`decode_fn_batched`.
+        Returns ``(hidden, new_cache)`` per item, in item order,
+        bit-identical to looping :meth:`decode_fn` per request.  A
+        single-row group skips the batched machinery entirely and runs the
+        serial variant (no stack/unstack, shares its compiled fn with the
+        serial path)."""
+        stack = jax.tree_util.tree_map
+        out: List[Optional[Tuple[object, object]]] = [None] * len(items)
+        groups: "OrderedDict[tuple, List[int]]" = OrderedDict()
+        for i, (gexit, cache, _tok, _pos) in enumerate(items):
+            groups.setdefault((gexit, self._cache_sig(cache)), []).append(i)
+        for (gexit, _sig), idxs in groups.items():
+            n = len(idxs)
+            if n == 1:
+                i = idxs[0]
+                _, cache, tok, pos = items[i]
+                fn = self.decode_fn(gexit)
+                h, new_cache = fn(params, cache, tok,
+                                  jnp.asarray(pos, jnp.int32))
+                out[i] = (h, new_cache)
+                self.serial_tokens += 1
+                continue
+            bucket = self.batch_bucket(n)
+            rows = [items[i] for i in idxs]
+            rows += [rows[0]] * (bucket - n)              # pad: replicate
+            cb = stack(lambda *xs: jnp.stack(xs), *[r[1] for r in rows])
+            tb = jnp.stack([r[2] for r in rows])
+            pb = jnp.asarray([r[3] for r in rows], jnp.int32)
+            fn = self.decode_fn_batched(gexit, n, sharded=sharded)
+            hb, cob = fn(params, cb, tb, pb)
+            for j, i in enumerate(idxs):
+                out[i] = (hb[j], stack(lambda x, j=j: x[j], cob))
+            self.batched_calls += 1
+            self.batched_tokens += n
+            self.padded_rows += bucket - n
+            if n > self.batched_max:
+                self.batched_max = n
+        return out
 
 
 class ServingEngine:

@@ -19,7 +19,7 @@ from repro.sim.build import (Scenario, Simulation, build_stack,  # noqa: F401
 from repro.sim.registry import (STREAMING_TENANTS, get_scenario,  # noqa: F401
                                 list_scenarios, register_scenario)
 from repro.sim.spec import (AdmissionSpec, AutoscaleSpec,  # noqa: F401
-                            DerivedSeeds, EngineSpec,
+                            CalibrationSpec, DerivedSeeds, EngineSpec,
                             MobilitySpec, PlannerSpec, RouterSpec,
                             ScenarioSpec, TopologySpec, WorkloadSpec,
                             apply_overrides)

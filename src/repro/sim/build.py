@@ -50,13 +50,23 @@ class Scenario:
 
 
 def build_stack(spec: PlannerSpec, *, with_model: bool = False,
+                with_params: Optional[bool] = None,
                 scenario_spec: Optional[ScenarioSpec] = None) -> Scenario:
     """Build the smoke-scale LM stack a spec's planner describes: config,
     ``InferenceGraph`` (input/result payloads applied), and an
     ``EdgentPlanner`` whose roofline predictors are rescaled to the spec's
-    per-tier step times.  ``with_model=True`` additionally initializes the
-    executable model (fp32 params, fixed init key — part of the scenario
-    contract, not the seed tree)."""
+    per-tier step times.  ``with_model=True`` additionally constructs the
+    executable model; ``with_params`` (default: follows ``with_model``)
+    controls whether its parameters are initialized — the expensive half
+    (fp32 params, fixed init key — part of the scenario contract, not the
+    seed tree).  Prompt-sampling-only scenarios need neither: the vocab
+    comes from ``cfg``, so they build with both off and skip model
+    construction entirely.
+
+    With ``scenario_spec.calibration`` set, the planner's latency models are
+    replaced by regressions fitted from the named measured
+    :class:`~repro.calib.CalibrationTable` (``repro.calib.fit`` — see
+    docs/calibration.md)."""
     from repro.configs import get_smoke_config
     from repro.core import EdgentPlanner, lm_graph
     from repro.core.latency_model import (RooflineLatencyModel,
@@ -77,13 +87,25 @@ def build_stack(spec: PlannerSpec, *, with_model: bool = False,
     planner = EdgentPlanner(graph, latency_req_s=spec.latency_req_s)
     planner.with_models(ScaledLatencyModel(edge, k_edge),
                         ScaledLatencyModel(dev, k_dev))
+    if scenario_spec is not None and scenario_spec.calibration is not None \
+            and scenario_spec.calibration.table:
+        from repro.calib.fit import models_from_table
+        from repro.calib.table import CalibrationTable
+        table = CalibrationTable.load(scenario_spec.calibration.table)
+        f_edge, f_dev = models_from_table(
+            table, spec, graph=graph,
+            anchor=scenario_spec.calibration.anchor)
+        planner.with_models(f_edge, f_dev)
     model = params = None
+    if with_params is None:
+        with_params = with_model
     if with_model:
         import jax
         import jax.numpy as jnp
         from repro.models import Model
         model = Model(cfg)
-        params = model.init_params(jax.random.key(0), dtype=jnp.float32)
+        if with_params:
+            params = model.init_params(jax.random.key(0), dtype=jnp.float32)
     return Scenario(spec=scenario_spec, cfg=cfg, graph=graph,
                     planner=planner, model=model, params=params)
 
@@ -210,7 +232,9 @@ class Simulation:
             max_coop=spec.router.max_coop,
             retain_records=spec.engine.retain_records,
             tracer=tracer, timeline=timeline,
-            autoscaler=autoscaler, admission=admission)
+            autoscaler=autoscaler, admission=admission,
+            batch_decode=spec.engine.batch_decode,
+            shard_decode=spec.engine.shard_decode)
         sc.topo, sc.mobility, sc.handover = topo, mobility, handover
         sc.workload, sc.engine = workload, engine
         self.build_s = time.perf_counter() - t_build0

@@ -54,6 +54,12 @@ def _check_shardable(spec: ScenarioSpec):
             "sharded runs do not support engine.trace / engine.timeline "
             "observers (each tile would write its own partial artifact); "
             "run the spec with shards=1 to attach them")
+    if spec.engine.real_decode:
+        raise ValueError(
+            "sharded runs do not support engine.real_decode (each tile "
+            "would build its own model replica and produce per-tile token "
+            "streams the merge does not carry); run the spec with shards=1 "
+            "for real decode, or real_decode=False to shard")
 
 
 def tile_spec(spec: ScenarioSpec, g: int) -> ScenarioSpec:
@@ -149,7 +155,9 @@ def run_tile(spec: ScenarioSpec, g: int) -> Tuple[FleetMetrics, Dict]:
         handover=handover, replan_max_coop=tspec.engine.replan_max_coop,
         max_coop=tspec.router.max_coop,
         retain_records=tspec.engine.retain_records,
-        autoscaler=autoscaler, admission=admission)
+        autoscaler=autoscaler, admission=admission,
+        batch_decode=tspec.engine.batch_decode,
+        shard_decode=tspec.engine.shard_decode)
     metrics = engine.run(workload)
     info = {"tile": g, "shards": k,
             "events_processed": engine.events_processed,

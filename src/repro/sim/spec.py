@@ -28,9 +28,9 @@ from repro.fleet.router import ROUTER_ALIASES
 from repro.fleet.workload import DEFAULT_TENANTS, TenantClass
 
 __all__ = [
-    "AdmissionSpec", "AutoscaleSpec", "DerivedSeeds", "EngineSpec",
-    "MobilitySpec", "PlannerSpec", "RouterSpec", "ScenarioSpec",
-    "TopologySpec", "WorkloadSpec", "apply_overrides",
+    "AdmissionSpec", "AutoscaleSpec", "CalibrationSpec", "DerivedSeeds",
+    "EngineSpec", "MobilitySpec", "PlannerSpec", "RouterSpec",
+    "ScenarioSpec", "TopologySpec", "WorkloadSpec", "apply_overrides",
 ]
 
 
@@ -303,6 +303,31 @@ class EngineSpec(_Spec):
     trace: Optional[str] = None
     timeline: Optional[str] = None
     timeline_dt: float = 0.5
+    # real-decode execution strategy (docs/calibration.md): batch_decode
+    # runs each round's co-located requests as vmapped groups (one compiled
+    # call per exit x cache-geometry group); shard_decode additionally
+    # shard_maps groups over the host device mesh when one exists.  Token
+    # values and virtual timing are identical either way — these are
+    # host-throughput knobs only.
+    batch_decode: bool = True
+    shard_decode: bool = False
+
+
+@dataclass
+class CalibrationSpec(_Spec):
+    """Run the scenario's planner on *measured* per-layer latency models
+    instead of the analytic rooflines (docs/calibration.md).
+
+    ``table`` names a :class:`repro.calib.CalibrationTable` JSON produced by
+    ``python -m repro.calib measure``; at build time ``repro.calib.fit``
+    fits the paper-style per-layer-type regressions from it and swaps them
+    into the planner.  ``anchor=True`` (default) rescales the fitted models
+    so a full-branch decode step still costs the spec's
+    ``edge_step_s`` / ``device_step_s`` — calibration then changes the
+    *shape* of the cost surface (where cuts and exits land), not the
+    simulated hardware speed; ``anchor=False`` uses raw measured seconds."""
+    table: Optional[str] = None
+    anchor: bool = True
 
 
 @dataclass
@@ -324,11 +349,15 @@ class ScenarioSpec(_Spec):
     # off switch that keeps summaries bit-identical to pre-elastic runs
     autoscale: Optional[AutoscaleSpec] = None
     admission: Optional[AdmissionSpec] = None
+    # calibration (docs/calibration.md): None runs the analytic latency
+    # models — the pre-calibration behavior, byte-identical summaries
+    calibration: Optional[CalibrationSpec] = None
 
     _NESTED = {"planner": PlannerSpec, "topology": TopologySpec,
                "workload": WorkloadSpec, "router": RouterSpec,
                "engine": EngineSpec, "mobility": MobilitySpec,
-               "autoscale": AutoscaleSpec, "admission": AdmissionSpec}
+               "autoscale": AutoscaleSpec, "admission": AdmissionSpec,
+               "calibration": CalibrationSpec}
 
     def seeds(self) -> DerivedSeeds:
         """The one place per-subsystem seeds come from (see module
