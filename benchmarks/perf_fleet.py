@@ -194,11 +194,16 @@ def run_cell(family: str, num_devices: int, *, profile: bool = False,
             spec, processes=processes if processes > 1 else None)
         wall = time.perf_counter() - t0
         s = metrics.summary()
+        # the real worker count: run_sharded_info caps its pool at the tile
+        # count and runs sequentially (no pool) when processes <= 1 —
+        # recording the requested number here used to claim "processes": 1
+        # for every pooled run
+        workers = min(processes, spec.topology.shards) if processes > 1 else 1
         return {
             "devices": num_devices,
             "edges": spec.topology.num_edges,
             "shards": spec.topology.shards,
-            "processes": max(processes, 1),
+            "processes": workers,
             "requests": s["requests"],
             "events": info["events_processed"],
             "build_s": 0.0,
@@ -281,9 +286,15 @@ def main():
         # --smoke doubles as the CI observability cell: profile on
         # (per-kind wall time, cache hit rates) for unsharded cells; gate
         # runs stay observers-off so the measured path is the production
-        # one (sharded cells report merged event/compaction counts instead)
+        # one (sharded cells report merged event/compaction counts instead).
+        # The smoke sharded cell always exercises a real worker pool (4
+        # processes unless more were requested) so the multiprocess merge
+        # path is covered even when CI forgets --processes.
+        procs = args.processes
+        if args.smoke and (family, nd) == SMOKE_100K:
+            procs = max(args.processes, 4)
         cell = run_cell(family, nd, profile=args.smoke and nd < 10000,
-                        processes=args.processes)
+                        processes=procs)
         slot["cells"][f"{family}/{nd}"] = cell
         shard_tag = f"x{cell['shards']}" if cell.get("shards", 1) > 1 else ""
         print(f"{family:>10} {nd:>8} {cell['edges']:>6} "

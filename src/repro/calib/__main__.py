@@ -32,7 +32,8 @@ def _cmd_measure(args) -> int:
             from repro.sim import get_scenario
             spec = get_scenario(args.scenario).planner
         table = measure_lm(spec, arch=args.arch, batches=_ints(args.batches),
-                           seqs=_ints(args.seqs), reps=args.reps)
+                           seqs=_ints(args.seqs), reps=args.reps,
+                           decode_path=args.decode_path)
     if args.out:
         table.save(args.out)
         print(f"wrote {len(table.samples)} samples for {table.arch} "
@@ -106,6 +107,11 @@ def main(argv=None) -> int:
     m.add_argument("--seqs", default="8",
                    help="comma-separated prompt lengths (LM sweep)")
     m.add_argument("--reps", type=int, default=5, help="median-of-k repeats")
+    m.add_argument("--decode-path", default="batched",
+                   choices=("batched", "arena"), dest="decode_path",
+                   help="which B>1 decode path the LM samples time: the "
+                        "vmapped batched groups or the slot-resident "
+                        "arena calls (docs/performance.md)")
     m.add_argument("--out", default=None, help="table JSON path")
     m.set_defaults(fn=_cmd_measure)
 

@@ -44,21 +44,30 @@ def _median_time(fn, *args, reps: int = 5, warmup: int = 2) -> float:
 def measure_lm(spec=None, *, arch: Optional[str] = None,
                batches: Sequence[int] = (1, 2, 4),
                seqs: Sequence[int] = (8,), reps: int = 5,
-               warmup: int = 2) -> CalibrationTable:
+               warmup: int = 2,
+               decode_path: str = "batched") -> CalibrationTable:
     """Measure the LM decode/prefill/head kernels of ``spec`` (a
     ``PlannerSpec``; ``arch=`` shorthand builds one).
 
     Decode samples run through the fleet's own compiled paths — the serial
-    per-exit variant at B=1 and the vmapped batched variant above — so the
-    table calibrates exactly what ``real_decode=True`` scenarios execute.
-    The position axis rides on ``seqs``: each prompt length measures decode
-    at a different KV offset."""
+    per-exit variant at B=1 and, above that, the path ``decode_path``
+    selects: ``"batched"`` (the vmapped ``decode_fn_batched`` groups) or
+    ``"arena"`` (the slot-resident masked ``decode_fn_arena`` calls, with
+    rows admitted to a ``DecodeArena`` sized to the batch) — so the table
+    prices exactly what a ``real_decode=True`` scenario with the matching
+    ``EngineSpec`` knob executes.  One table measures one path
+    (``meta["decode_path"]``): the fitter treats every decode sample as
+    the same regression family.  The position axis rides on ``seqs``:
+    each prompt length measures decode at a different KV offset."""
     import jax
     import jax.numpy as jnp
     from repro.serving.engine import CoInferenceStepper
     from repro.sim.build import build_stack
     from repro.sim.spec import PlannerSpec
 
+    if decode_path not in ("batched", "arena"):
+        raise ValueError(f"unknown decode_path {decode_path!r}: expected "
+                         "'batched' or 'arena'")
     if spec is None:
         spec = PlannerSpec() if arch is None else PlannerSpec(arch=arch)
     sc = build_stack(spec, with_model=True)
@@ -105,6 +114,30 @@ def measure_lm(spec=None, *, arch: Optional[str] = None,
                     cache, tok = rows[0]
                     t = _median_time(fn, params, cache, tok, pos[0],
                                      reps=reps, warmup=warmup)
+                elif decode_path == "arena":
+                    # the slot-resident path: rows admitted once, then the
+                    # masked full-arena call is the steady-state per-token
+                    # cost.  The cache argument is donated, so timing
+                    # threads the returned cache forward instead of
+                    # re-passing one buffer.
+                    from repro.serving.arena import DecodeArena
+                    arena = DecodeArena(model, slots=b, length=seq + 4,
+                                        dtype=jnp.float32)
+                    for i, (cache, tok) in enumerate(rows):
+                        arena.admit(i, cache)
+                    fn = stepper.decode_fn_arena(e, arena)
+                    tb = jnp.stack([r[1] for r in rows])
+                    tok_a = jnp.zeros((arena.slots, 1, 1), jnp.int32) \
+                        .at[:b].set(tb)
+                    pos_a = jnp.zeros((arena.slots,), jnp.int32) \
+                        .at[:b].set(pos)
+                    mask_a = jnp.arange(arena.slots) < b
+
+                    def run_once():
+                        h, arena.cache = fn(params, arena.cache, tok_a,
+                                            pos_a, mask_a)
+                        return h
+                    t = _median_time(run_once, reps=reps, warmup=warmup)
                 else:
                     fn = stepper.decode_fn_batched(e, b)
                     cb = tree(lambda *xs: jnp.stack(xs),
@@ -128,7 +161,8 @@ def measure_lm(spec=None, *, arch: Optional[str] = None,
     return CalibrationTable(
         arch=spec.arch, source="measure_lm", samples=samples,
         meta={"reps": reps, "warmup": warmup, "batches": list(batches),
-              "seqs": list(seqs), "platform": jax.devices()[0].platform,
+              "seqs": list(seqs), "decode_path": decode_path,
+              "platform": jax.devices()[0].platform,
               "num_exits": stepper.n_graph,
               "edge_step_s": spec.edge_step_s,
               "device_step_s": spec.device_step_s})

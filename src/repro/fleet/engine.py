@@ -67,7 +67,8 @@ class FleetEngine:
                  compact_ratio: Optional[float] = 0.5,
                  autoscaler=None, admission=None,
                  tracer=None, timeline=None, profiler=None,
-                 batch_decode: bool = True, shard_decode: bool = False):
+                 batch_decode: bool = True, shard_decode: bool = False,
+                 arena_decode: bool = False, arena_bucket: str = "pow2"):
         self.topo = topo
         # elasticity (fleet.elastic, docs/elastic.md): an Autoscaler drives
         # `scale` events that resize per-edge capacity (scale-down drains —
@@ -103,6 +104,17 @@ class FleetEngine:
         # virtual timing never depends on these flags.
         self.batch_decode = batch_decode
         self.shard_decode = shard_decode
+        # slot-resident decode arena (docs/performance.md): with
+        # arena_decode each edge holds a persistent [slots, ...] KV stack —
+        # requests scatter in at admission, stay resident across rounds,
+        # and a round is at most one masked compiled call per model exit
+        # (no per-token restacking, no pad-by-replication).  Token values
+        # stay bit-identical to the serial path (tests/test_arena.py);
+        # virtual timing never depends on the flag.
+        self.arena_decode = arena_decode
+        self.arena_bucket = arena_bucket
+        self._arenas = {}              # eid -> DecodeArena (reset per run)
+        self._arena_len_hint = 1
         self.demote = demote_on_deadline
         self.prefill_div = prefill_div
         # retain_records=False keeps FleetMetrics to its running aggregates
@@ -204,6 +216,14 @@ class FleetEngine:
             # timeline opens for every edge even if it never changes
             for edge in self.topo.edges:
                 metrics.mark_capacity(edge.eid, edge.capacity, 0.0)
+        self._arenas = {}                  # arena residency is per-run state
+        if self.arena_decode and self.model is not None:
+            # pre-size the arena length from the workload so steady-state
+            # geometry (and the compiled-variant population) is fixed from
+            # the first round: the longest cache any request will need
+            self._arena_len_hint = max(
+                (r.prompt_len + r.max_new_tokens + 1 for r in workload),
+                default=1)
         for req in workload:               # same: a workload list is reusable
             req.edge, req.admitted_s = -1, None
             req.assign = None
@@ -267,6 +287,15 @@ class FleetEngine:
                 prof.add(kind, time.perf_counter() - t0, len(evq))
         if elastic:
             metrics.finalize_capacity()
+        if self.tracer is not None and self.model is not None:
+            # decode-efficiency panel data for `repro.obs report`: a trace
+            # metadata record (no timestamp — it is not a span), read-only
+            # with respect to the simulation like every tracer write.
+            # Stepper counters are cumulative over its lifetime.
+            st = self.stepper.cache_stats()
+            self.tracer.decode_stats({"decode": st["decode"],
+                                      "arena": st["arena"],
+                                      "jit": st["jit"]})
         return metrics
 
     # ------------------------------------------------------------ bandwidth
@@ -494,6 +523,10 @@ class FleetEngine:
                     migrated_bytes=req.migrated_bytes))
                 self._release_coop(req)
                 req.cache = req.next_tok = None      # free decode state
+                if self.arena_decode and self.model is not None:
+                    ar = self._arenas.get(edge.eid)
+                    if ar is not None and ar.has(req.rid):
+                        ar.evict(req.rid)            # free the slot row
             elif req.replan_pending:
                 # the handover policy fired mid-round; the migration (or
                 # in-place replan) executes at this round boundary, where the
@@ -546,10 +579,22 @@ class FleetEngine:
                 for eid in req.assign.eids[1:]:
                     self.topo.edge(eid).coop_inflight += 1
                 req.coop_counted = True
-            if self.model is not None and req.cache is None:
-                # migrated requests keep their shipped cache — re-prefilling
-                # would clobber the decode state the handover paid to move
-                self._prefill_real(req)
+            if self.model is not None:
+                if self.arena_decode:
+                    # slot-resident path: prefill (or a migrated request's
+                    # shipped cache) scatters into the edge arena once here;
+                    # the request stays resident until completion/extract
+                    ar = self._arena(edge)
+                    if not ar.has(req.rid):
+                        if req.cache is None:
+                            self._prefill_real(req)
+                        ar.admit(req.rid, req.cache)
+                        req.cache = None   # state lives in the arena now
+                elif req.cache is None:
+                    # migrated requests keep their shipped cache —
+                    # re-prefilling would clobber the decode state the
+                    # handover paid to move
+                    self._prefill_real(req)
             edge.active.append(req)
         if not edge.active:
             return
@@ -615,7 +660,10 @@ class FleetEngine:
                 decode_batch.append(req)
             round_dt = max(round_dt, t_step)
         if decode_batch:
-            self._decode_real_batch(decode_batch)
+            if self.arena_decode:
+                self._decode_real_arena(edge, decode_batch)
+            else:
+                self._decode_real_batch(decode_batch)
         edge.busy_s += round_dt
         metrics.add_busy(edge.eid, round_dt)
         edge.ema_round_s = round_dt if edge.ema_round_s == 0.0 else \
@@ -895,6 +943,14 @@ class FleetEngine:
             return
         edge.tokens_owed -= req.max_new_tokens - req.tokens_done
         self._blg_add(edge, -1)        # leaves the batch without completing
+        if self.arena_decode and self.model is not None:
+            # gather the slot row back out (sliced to the request's own
+            # length — bitwise what the serial path would ship) so the
+            # handover snapshot carries real state; the destination edge's
+            # arena re-admits it on arrival
+            ar = self._arenas.get(edge.eid)
+            if ar is not None and ar.has(req.rid):
+                req.cache = ar.extract(req.rid)
         self._ship(req, edge.eid, dec, nbytes, now, evq, metrics)
 
     def _replan_queued(self, req: FleetRequest, device, edge: EdgeNode,
@@ -982,7 +1038,7 @@ class FleetEngine:
         cache = self.model.init_cache(
             1, req.prompt_len + req.max_new_tokens + 1, dtype=dtype,
             enc_len=req.prompt_len)
-        h, cache = self.model.prefill(self.params, toks, cache)
+        h, cache = self.stepper.prefill_fn()(self.params, toks, cache)
         logits = self.model.logits(self.params, h)
         req.next_tok = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
         req.cache = cache
@@ -1017,4 +1073,42 @@ class FleetEngine:
             logits = self.model.logits(self.params, h)
             req.next_tok = jnp.argmax(logits[:, -1, :], -1) \
                 .astype(jnp.int32)[:, None]
+            req.tokens.append(int(req.next_tok[0, 0]))
+
+    def _arena(self, edge: EdgeNode):
+        """The edge's decode arena, created lazily at first admission:
+        slots sized to the edge's capacity, length to the workload's
+        longest cache (both grow on demand — see serving.arena)."""
+        ar = self._arenas.get(edge.eid)
+        if ar is None:
+            import jax.numpy as jnp
+            from repro.serving.arena import DecodeArena
+            dtype = self.dtype if self.dtype is not None else jnp.float32
+            ar = DecodeArena(self.model, slots=max(1, edge.capacity),
+                             length=self._arena_len_hint, dtype=dtype,
+                             bucket=self.arena_bucket, stepper=self.stepper)
+            self._arenas[edge.eid] = ar
+        return ar
+
+    def _decode_real_arena(self, edge: EdgeNode,
+                           reqs: List[FleetRequest]):
+        """One decode round's token step through the edge's slot-resident
+        arena: at most one masked compiled call per model exit
+        (``CoInferenceStepper.decode_step_arena``) with no per-round cache
+        restacking, then one batched logits/argmax per exit group — the
+        head is row-independent, so each request's token is bit-identical
+        to the serial per-request epilogue."""
+        import jax.numpy as jnp
+        ar = self._arenas[edge.eid]
+        items = [(req.exit_point, ar.slot(req.rid), req.next_tok,
+                  req.prompt_len + req.tokens_done) for req in reqs]
+        next_toks = {}
+        for rows, h_all in self.stepper.decode_step_arena(
+                self.params, ar, items):
+            logits = self.model.logits(self.params, h_all[:, 0])
+            toks = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+            for _, slot, _, _ in rows:
+                next_toks[slot] = toks[slot][None, None]
+        for req in reqs:
+            req.next_tok = next_toks[ar.slot(req.rid)]
             req.tokens.append(int(req.next_tok[0, 0]))

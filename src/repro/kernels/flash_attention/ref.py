@@ -7,6 +7,27 @@ import jax
 import jax.numpy as jnp
 
 
+def decode_attention(q, k, v, lengths):
+    """q: [B, H, 1, hd]; k/v: [B, KV, T, hd]; lengths: [B] -> [B, H, 1, hd].
+
+    Single-query oracle for the arena decode kernel: row ``b`` attends over
+    its first ``lengths[b]`` key positions only (a zero-length row returns
+    zeros — the padded-slot convention)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, KV, G, S, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qr, kf) / math.sqrt(hd)
+    valid = jnp.arange(T)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, None, :], p, 0.0)  # len==0 -> zeros
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, vf)
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
 def attention(q, k, v, *, causal: bool = True):
     """q: [B, H, S, hd]; k/v: [B, KV, T, hd] -> [B, H, S, hd]; f32 softmax."""
     B, H, S, hd = q.shape

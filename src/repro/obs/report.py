@@ -129,7 +129,52 @@ def render_trace(trace: Dict, *, width: int = 40) -> str:
         lines.append("edge utilization (rounds in flight, virtual time ->)")
         for pid, spark in util.items():
             lines.append(f"  edge {pid:>3} {spark}")
+    panel = _decode_panel(events)
+    if panel:
+        lines.append("")
+        lines.extend(panel)
     return "\n".join(lines)
+
+
+def _decode_panel(events) -> list:
+    """The decode-efficiency panel from the engine's ``decode_stats``
+    metadata record (real-decode runs only; see Tracer.decode_stats).
+    Counters are cumulative over the stepper's lifetime."""
+    recs = [ev for ev in events
+            if ev.get("ph") == "M" and ev.get("name") == "decode_stats"
+            and isinstance(ev.get("args"), dict)]
+    if not recs:
+        return []
+    args = recs[-1]["args"]
+    dec = args.get("decode", {})
+    ar = args.get("arena", {})
+    jit = args.get("jit", {})
+    lines = ["decode efficiency (real-decode path)"]
+    waste_den = dec.get("batched_tokens", 0) + dec.get("padded_rows", 0)
+    waste = 100.0 * dec.get("padded_rows", 0) / waste_den if waste_den \
+        else 0.0
+    lines.append(
+        f"  batched: {dec.get('batched_calls', 0)} calls, "
+        f"{dec.get('batched_tokens', 0)} tokens, "
+        f"max group {dec.get('batched_max', 0)}, "
+        f"padded rows {dec.get('padded_rows', 0)} ({waste:.1f}% waste); "
+        f"serial tokens {dec.get('serial_tokens', 0)}")
+    occ = ar.get("occupancy")
+    lines.append(
+        f"  arena:   {ar.get('calls', 0)} calls, "
+        f"{ar.get('tokens', 0)} tokens, "
+        f"occupancy {f'{100.0 * occ:.1f}%' if occ is not None else '-'}, "
+        f"admits/evicts/grows "
+        f"{ar.get('admits', 0)}/{ar.get('evicts', 0)}/{ar.get('grows', 0)}")
+    hr = jit.get("hit_rate")
+    var = jit.get("variants", {})
+    lines.append(
+        f"  jit:     hit rate "
+        f"{f'{100.0 * hr:.1f}%' if hr is not None else '-'}, "
+        f"{jit.get('entries', 0)} compiled variants "
+        f"(serial {var.get('serial', 0)} / batched {var.get('batched', 0)}"
+        f" / arena {var.get('arena', 0)})")
+    return lines
 
 
 # --------------------------------------------------------------- timeline

@@ -107,6 +107,14 @@ class Tracer:
         self.events.append({"name": "thread_name", "ph": "M", "pid": pid,
                             "tid": tid, "args": {"name": name}})
 
+    def decode_stats(self, stats: Dict) -> None:
+        """Attach the run's decode-efficiency counters (the engine's
+        ``cache_stats()`` decode/arena/jit blocks) as a metadata record —
+        not a span, so no timestamp.  ``repro.obs report`` renders it as
+        the decode-efficiency panel."""
+        self.events.append({"name": "decode_stats", "ph": "M", "pid": 0,
+                            "tid": 0, "args": stats})
+
     def annotate_fleet(self, topo) -> None:
         """Name every track for a fleet topology (edges/slots/devices/net)
         so the viewer shows labels instead of bare pids."""

@@ -1,0 +1,204 @@
+"""Slot-resident decode arena: persistent stacked KV state for one edge.
+
+The PR-9 batched decode path re-stacks every request's KV leaves host-side
+each round (``CoInferenceStepper.decode_step_batch``), pads groups by
+replicating rows, and compiles one variant per ``(exit, batch-bucket)``.
+A :class:`DecodeArena` removes all three costs: cache leaves are
+preallocated ``[slots, ...]`` stacks padded along the sequence axis to a
+shared arena length, a request scatters its row in **once** at admission
+(``admit``), stays resident across rounds, and gathers it back out only
+when it leaves (``extract``, for handover shipping).  Per-round device
+traffic is just the tiny (tokens, positions, active-mask) arrays; the
+compiled call shape never changes, so there is at most one variant per
+model exit (``CoInferenceStepper.decode_fn_arena``).
+
+Bit-identity with the serial path rests on two facts, both pinned by
+tests/test_arena.py:
+
+* ``vmap`` rows are independent — the per-row math of the arena call is
+  the per-request serial step (the PR-9 contract); and
+* the decode attention bias masks positions beyond the cache write head
+  with ``-1e30`` (``models/layers``), so the zero-initialized padding
+  between a request's true cache length and the arena length contributes
+  ``exp(-1e30 - m) == +0.0`` exactly — extra trailing zeros in the
+  softmax/PV reductions are exact no-ops.
+
+Inactive slots decode dummy inputs (token 0 at position 0) whose cache
+writes are discarded by the masked commit; their FLOPs are counted in
+``stepper.arena_masked_rows`` so occupancy waste stays observable.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DecodeArena", "pow2"]
+
+
+def pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+class DecodeArena:
+    """Persistent ``[slots, ...]`` decode state for one edge's batch.
+
+    ``slots`` and ``length`` are sized up front (edge capacity, workload
+    max cache length) so steady-state geometry — and therefore the set of
+    compiled variants — is fixed; both still grow on demand (slots double,
+    length re-buckets) when a workload outruns its hints.  ``bucket``
+    selects the length policy: ``"pow2"`` rounds the arena length up to a
+    power of two (fewer recompiles if the hint was wrong), ``"exact"``
+    keeps it as given.
+    """
+
+    def __init__(self, model, *, slots: int, length: int, dtype,
+                 bucket: str = "pow2", stepper=None):
+        if bucket not in ("pow2", "exact"):
+            raise ValueError(f"unknown arena bucket policy {bucket!r}: "
+                             "expected 'pow2' or 'exact'")
+        self.model = model
+        self.dtype = dtype
+        self.bucket = bucket
+        self.stepper = stepper
+        self.slots = pow2(max(1, slots))
+        self.length = self._bucket_len(max(1, length))
+        # per-leaf sequence axis, discovered by diffing cache shapes at two
+        # lengths (-1 = length-independent leaf); axes are a tree congruent
+        # with the cache so tree_maps stay structural
+        s1 = jax.eval_shape(lambda: model.init_cache(1, 17, dtype=dtype))
+        s2 = jax.eval_shape(lambda: model.init_cache(1, 19, dtype=dtype))
+        def seq_axis(a, b):
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                    if x != y]
+            if len(diff) > 1:
+                raise ValueError(
+                    f"cache leaf varies on {len(diff)} axes with max_seq "
+                    f"({a.shape} vs {b.shape}); arena needs exactly one "
+                    "sequence axis per leaf")
+            return diff[0] if diff else -1
+        self._seq_ax = jax.tree_util.tree_map(seq_axis, s1, s2)
+        self.cache = self._alloc(self.slots, self.length)
+        self._free: List[int] = list(range(self.slots))
+        heapq.heapify(self._free)
+        self._slot_of: Dict[object, int] = {}
+        self._true_len: Dict[object, int] = {}
+
+    # ------------------------------------------------------------ geometry
+    def _bucket_len(self, n: int) -> int:
+        return pow2(n) if self.bucket == "pow2" else n
+
+    def _alloc(self, slots: int, length: int):
+        shapes = jax.eval_shape(
+            lambda: self.model.init_cache(1, length, dtype=self.dtype))
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros((slots,) + s.shape, s.dtype), shapes)
+
+    def sig(self) -> tuple:
+        """Hashable shape/dtype signature of the arena leaves — the jit key
+        of the compiled arena variant (one per (exit, sig))."""
+        return tuple((tuple(leaf.shape), str(leaf.dtype))
+                     for leaf in jax.tree_util.tree_leaves(self.cache))
+
+    @property
+    def active(self) -> int:
+        return len(self._slot_of)
+
+    def has(self, rid) -> bool:
+        return rid in self._slot_of
+
+    def slot(self, rid) -> int:
+        return self._slot_of[rid]
+
+    def true_len(self, rid) -> int:
+        """The resident request's own cache length (its serial-path
+        ``max_seq``); ``extract`` slices the arena row back to it."""
+        return self._true_len[rid]
+
+    def _count(self, name: str, n: int = 1) -> None:
+        if self.stepper is not None:
+            setattr(self.stepper, name, getattr(self.stepper, name) + n)
+
+    def _grow_slots(self) -> None:
+        new_slots = self.slots * 2
+        self.cache = jax.tree_util.tree_map(
+            lambda leaf: jnp.concatenate(
+                [leaf, jnp.zeros((new_slots - self.slots,) + leaf.shape[1:],
+                                 leaf.dtype)], axis=0),
+            self.cache)
+        for s in range(self.slots, new_slots):
+            heapq.heappush(self._free, s)
+        self.slots = new_slots
+        self._count("arena_grows")
+
+    def _grow_length(self, need: int) -> None:
+        new_len = self._bucket_len(need)
+        def grow(leaf, ax):
+            if ax < 0:
+                return leaf
+            pad = [(0, 0)] * leaf.ndim
+            pad[ax + 1] = (0, new_len - leaf.shape[ax + 1])  # +1: slots axis
+            return jnp.pad(leaf, pad)
+        self.cache = jax.tree_util.tree_map(grow, self.cache, self._seq_ax)
+        self.length = new_len
+        self._count("arena_grows")
+
+    # ------------------------------------------------------------ residency
+    def admit(self, rid, cache) -> int:
+        """Scatter one request's B=1 cache into a free slot row (padded
+        along the sequence axis with zeros — inert under the decode
+        attention mask) and return the slot.  The scatter is the only
+        per-request device write until the request leaves."""
+        assert rid not in self._slot_of, f"rid {rid!r} already resident"
+        lens = [leaf.shape[ax] for leaf, ax in zip(
+            jax.tree_util.tree_leaves(cache),
+            jax.tree_util.tree_leaves(self._seq_ax)) if ax >= 0]
+        true_len = max(lens) if lens else self.length
+        if true_len > self.length:
+            self._grow_length(true_len)
+        if not self._free:
+            self._grow_slots()
+        slot = heapq.heappop(self._free)
+        def pad_row(leaf, ax):
+            if ax >= 0 and leaf.shape[ax] < self.length:
+                pad = [(0, 0)] * leaf.ndim
+                pad[ax] = (0, self.length - leaf.shape[ax])
+                leaf = jnp.pad(leaf, pad)
+            return leaf
+        row = jax.tree_util.tree_map(pad_row, cache, self._seq_ax)
+        self.cache = jax.tree_util.tree_map(
+            lambda a, r: a.at[slot].set(r), self.cache, row)
+        self._slot_of[rid] = slot
+        self._true_len[rid] = true_len
+        self._count("arena_admits")
+        return slot
+
+    def evict(self, rid) -> None:
+        """Free the slot (bookkeeping only — stale rows are masked out of
+        every subsequent call and fully overwritten on re-admission)."""
+        slot = self._slot_of.pop(rid)
+        del self._true_len[rid]
+        heapq.heappush(self._free, slot)
+        self._count("arena_evicts")
+
+    def extract(self, rid):
+        """Gather the resident row back out as a standalone B=1 cache —
+        sliced to the request's own length, bitwise equal to what the
+        serial path would hold — and evict.  The handover path ships this
+        snapshot to the destination edge, whose arena re-admits it."""
+        slot = self._slot_of[rid]
+        true_len = self._true_len[rid]
+        def cut(leaf, ax):
+            row = leaf[slot]
+            if ax >= 0 and row.shape[ax] > true_len:
+                row = jax.lax.slice_in_dim(row, 0, true_len, axis=ax)
+            return row
+        out = jax.tree_util.tree_map(cut, self.cache, self._seq_ax)
+        self.evict(rid)
+        return out

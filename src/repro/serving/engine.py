@@ -141,6 +141,17 @@ class CoInferenceStepper:
         # The serial `_decode_jit` cache stays unbounded: it holds at most
         # n_model + 1 entries by construction.
         self._decode_vjit: "OrderedDict[tuple, object]" = OrderedDict()
+        # arena decode (docs/performance.md): masked full-arena variants
+        # keyed (model exit, arena signature).  Unbounded like _decode_jit:
+        # steady-state arena geometry is fixed, so the population is at
+        # most one entry per model exit per geometry epoch.
+        self._decode_ajit: Dict[tuple, object] = {}
+        # one persistent jitted prefill wrapper (lazy; jit's own shape cache
+        # compiles per cache geometry).  Calling model.prefill eagerly
+        # re-traces its scan segments on EVERY request — O(requests) compile
+        # work and retained executables; through one jit object a fleet pays
+        # one compile per geometry instead.
+        self._prefill_jit = None
         self.jit_cache_max = max(1, jit_cache_max)
         self.jit_hits = self.jit_misses = 0
         # decode-path execution counters (asserted by tests/test_calib.py:
@@ -151,6 +162,15 @@ class CoInferenceStepper:
         self.serial_tokens = 0        # tokens produced one request at a time
         self.padded_rows = 0          # bucket padding rows computed+discarded
         self.batched_max = 0          # largest single vmap group seen
+        # arena-path execution counters (tests/test_arena.py): slot-resident
+        # decode — admit/evict/grow are the only per-request device writes,
+        # masked_rows counts inactive-slot FLOPs discarded per call
+        self.arena_calls = 0          # masked full-arena calls issued
+        self.arena_tokens = 0         # tokens produced through arena calls
+        self.arena_masked_rows = 0    # inactive rows computed+discarded
+        self.arena_admits = 0         # slot scatters (request enters arena)
+        self.arena_evicts = 0         # slot frees (complete or extracted)
+        self.arena_grows = 0          # slot-doubling / length re-bucketing
         self.n_graph = graph.num_exits
         self.n_model = model.num_segments if model is not None else graph.num_exits
         self.exit_points = list(range(1, self.n_graph + 1))
@@ -373,10 +393,15 @@ class CoInferenceStepper:
             "hop": block(self.hop_hits, self.hop_misses,
                          len(self.hop_cache)),
             # compiled decode variants: serial per-exit + LRU-bounded
-            # batched (exit, bucket) entries
+            # batched (exit, bucket) entries + masked arena (exit, sig)
+            # entries, with the per-family split under "variants"
             "jit": dict(block(self.jit_hits, self.jit_misses,
-                              len(self._decode_jit) + len(self._decode_vjit)),
-                        max_entries=self.jit_cache_max),
+                              len(self._decode_jit) + len(self._decode_vjit)
+                              + len(self._decode_ajit)),
+                        max_entries=self.jit_cache_max,
+                        variants={"serial": len(self._decode_jit),
+                                  "batched": len(self._decode_vjit),
+                                  "arena": len(self._decode_ajit)}),
             # execution counters, not a hit/miss cache: how decode tokens
             # actually ran (tests/test_calib.py pins the batched path)
             "decode": {"batched_calls": self.batched_calls,
@@ -384,6 +409,19 @@ class CoInferenceStepper:
                        "serial_tokens": self.serial_tokens,
                        "padded_rows": self.padded_rows,
                        "batched_max": self.batched_max},
+            # arena execution counters (tests/test_arena.py pins the
+            # slot-resident path); occupancy = active rows / rows computed
+            "arena": {"calls": self.arena_calls,
+                      "tokens": self.arena_tokens,
+                      "masked_rows": self.arena_masked_rows,
+                      "admits": self.arena_admits,
+                      "evicts": self.arena_evicts,
+                      "grows": self.arena_grows,
+                      "occupancy": round(
+                          self.arena_tokens
+                          / (self.arena_tokens + self.arena_masked_rows), 4)
+                      if self.arena_tokens + self.arena_masked_rows else None,
+                      "variants": len(self._decode_ajit)},
         }
 
     # ------------------------------------------------------------ decode path
@@ -392,6 +430,14 @@ class CoInferenceStepper:
         # the executing model is the reduced config: map exit points
         # proportionally (graph exit i -> model segment)
         return max(1, round(graph_exit * self.n_model / self.n_graph))
+
+    def prefill_fn(self):
+        """The shared jitted prefill: one compile per cache geometry for the
+        engine's whole lifetime (see ``_prefill_jit`` in ``__init__``)."""
+        assert self.model is not None, "timing-only stepper has no prefill"
+        if self._prefill_jit is None:
+            self._prefill_jit = jax.jit(self.model.prefill)
+        return self._prefill_jit
 
     def decode_fn(self, graph_exit: Optional[int]):
         assert self.model is not None, "timing-only stepper has no decode path"
@@ -523,6 +569,83 @@ class CoInferenceStepper:
                 self.batched_max = n
         return out
 
+    # ---------------------------------------------------------- arena decode
+    def decode_fn_arena(self, graph_exit: Optional[int], arena):
+        """The compiled masked-arena decode variant for ``graph_exit``
+        over ``arena``'s fixed geometry: ``vmap`` of the per-request step
+        over the full ``[slots, ...]`` cache stack, with a boolean
+        active-mask selecting which rows' cache writes commit
+        (``jnp.where`` per leaf — inactive rows keep their old state
+        bit-for-bit).  Keyed ``(model exit, arena signature)``, so as long
+        as the arena never regrows there is exactly one variant per model
+        exit regardless of the prompt-length / batch-width mix.  The cache
+        argument is donated: callers must thread the returned cache
+        forward (``DecodeArena`` does)."""
+        assert self.model is not None, "timing-only stepper has no decode path"
+        mexit = None if graph_exit is None else self.to_model_exit(graph_exit)
+        key = (mexit, arena.sig())
+        fn = self._decode_ajit.get(key)
+        if fn is not None:
+            self.jit_hits += 1
+            return fn
+        self.jit_misses += 1
+        ep = None if mexit is None or mexit >= self.n_model else mexit - 1
+        step = lambda p, c, t, pos: self.model.decode_step(  # noqa: E731
+            p, c, t, pos, exit_point=ep)[:2]
+        vstep = jax.vmap(step, in_axes=(None, 0, 0, 0))
+
+        def astep(p, cache, tok, pos, mask):
+            h, new_cache = vstep(p, cache, tok, pos)
+            committed = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(
+                    mask.reshape(mask.shape + (1,) * (n.ndim - 1)), n, o),
+                new_cache, cache)
+            return h, committed
+
+        fn = jax.jit(astep, donate_argnums=(1,))
+        self._decode_ajit[key] = fn
+        return fn
+
+    def decode_step_arena(self, params, arena, items: Sequence[tuple]
+                          ) -> List[tuple]:
+        """One decode step for every active slot of ``arena`` in at most
+        one compiled call per model exit.
+
+        ``items`` rows are ``(graph_exit, slot, next_tok, pos)`` — no
+        caches: the KV state is already resident.  Rows sharing a model
+        exit decode in one masked full-arena call; rows outside the mask
+        run with dummy inputs (token 0, position 0) and their cache writes
+        are discarded by the masked commit, so multiple exit groups may
+        sweep the same arena sequentially with disjoint masks.  Returns
+        one ``(rows, hidden)`` pair per exit group, ``hidden`` being the
+        full ``[slots, 1, 1, d]`` stack — callers index it by slot (each
+        row bit-identical to the serial path) or, cheaper, feed it whole
+        to one batched logits/argmax epilogue per group instead of one
+        per request (row-wise bit-identical on every backend we pin)."""
+        slots = arena.slots
+        groups: "OrderedDict[Optional[int], List[tuple]]" = OrderedDict()
+        for gexit, slot, tok, pos in items:
+            mexit = None if gexit is None else self.to_model_exit(gexit)
+            groups.setdefault(mexit, []).append((gexit, slot, tok, pos))
+        out: List[tuple] = []
+        for rows in groups.values():
+            tok_a = np.zeros((slots, 1, 1), np.int32)
+            pos_a = np.zeros((slots,), np.int32)
+            mask_a = np.zeros((slots,), bool)
+            for _, slot, tok, pos in rows:
+                tok_a[slot] = np.asarray(tok, np.int32)
+                pos_a[slot] = pos
+                mask_a[slot] = True
+            fn = self.decode_fn_arena(rows[0][0], arena)
+            h_all, arena.cache = fn(params, arena.cache,
+                                    jnp.asarray(tok_a), jnp.asarray(pos_a),
+                                    jnp.asarray(mask_a))
+            out.append((rows, h_all))
+            self.arena_calls += 1
+            self.arena_tokens += len(rows)
+            self.arena_masked_rows += slots - len(rows)
+        return out
+
 
 class ServingEngine:
     def __init__(self, model: Model, params, graph: InferenceGraph,
@@ -570,7 +693,8 @@ class ServingEngine:
         plan = self.stepper.plan(bw)
         clock = start_s
         # prefill (virtual time: prefill ~ prompt_len * step cost; value: real)
-        h, cache = self.model.prefill(self.params, jnp.asarray(toks), cache)
+        h, cache = self.stepper.prefill_fn()(self.params, jnp.asarray(toks),
+                                             cache)
         clock += self.stepper.step_time(plan.exit_point, plan.partition, bw) * \
             max(1, prompt_len // 8)
         logits = self.model.logits(self.params, h)

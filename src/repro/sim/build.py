@@ -234,7 +234,9 @@ class Simulation:
             tracer=tracer, timeline=timeline,
             autoscaler=autoscaler, admission=admission,
             batch_decode=spec.engine.batch_decode,
-            shard_decode=spec.engine.shard_decode)
+            shard_decode=spec.engine.shard_decode,
+            arena_decode=spec.engine.arena_decode,
+            arena_bucket=spec.engine.arena_bucket)
         sc.topo, sc.mobility, sc.handover = topo, mobility, handover
         sc.workload, sc.engine = workload, engine
         self.build_s = time.perf_counter() - t_build0

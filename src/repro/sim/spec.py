@@ -311,6 +311,22 @@ class EngineSpec(_Spec):
     # host-throughput knobs only.
     batch_decode: bool = True
     shard_decode: bool = False
+    # slot-resident decode arena (docs/performance.md): arena_decode keeps
+    # each edge's KV state resident in a persistent [slots, ...] stack and
+    # decodes a round in at most one masked compiled call per model exit —
+    # no per-token restacking, no pad-by-replication.  arena_bucket sets
+    # the arena-length policy ('pow2' rounds the shared cache length up to
+    # a power of two, 'exact' keeps the workload maximum).  Token values
+    # and virtual timing are identical either way; off (the default) keeps
+    # runs byte-identical to pre-arena goldens.
+    arena_decode: bool = False
+    arena_bucket: str = "pow2"
+
+    def __post_init__(self):
+        if self.arena_bucket not in ("pow2", "exact"):
+            raise ValueError(
+                f"unknown arena_bucket {self.arena_bucket!r}: expected "
+                "'pow2' or 'exact'")
 
 
 @dataclass

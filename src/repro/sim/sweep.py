@@ -90,10 +90,32 @@ def run_cell(spec: ScenarioSpec) -> Dict:
     sim = Simulation(spec)
     metrics = sim.run().summary()
     engine = sim.scenario.engine
-    return {"spec": spec.to_dict(), "metrics": metrics,
-            "events": {"processed": engine.events_processed,
-                       "by_kind": dict(sorted(engine.event_counts.items()))},
-            "wall_s": round(time.perf_counter() - t0, 3)}
+    row = {"spec": spec.to_dict(), "metrics": metrics,
+           "events": {"processed": engine.events_processed,
+                      "by_kind": dict(sorted(engine.event_counts.items()))},
+           "wall_s": round(time.perf_counter() - t0, 3)}
+    if spec.engine.real_decode:
+        # decode-efficiency columns (docs/performance.md): deterministic
+        # token/call counters from the stepper, so parallel and inline
+        # sweeps still produce identical rows (only wall_s is stripped by
+        # the equivalence pin in tests/test_sweep.py)
+        st = engine.stepper.cache_stats()
+        dec, ar, jit = st["decode"], st["arena"], st["jit"]
+        waste_den = dec["batched_tokens"] + dec["padded_rows"]
+        row["decode"] = {
+            "batched_calls": dec["batched_calls"],
+            "batched_max": dec["batched_max"],
+            "padded_rows": dec["padded_rows"],
+            "pad_waste": round(dec["padded_rows"] / waste_den, 4)
+            if waste_den else 0.0,
+            "serial_tokens": dec["serial_tokens"],
+            "jit_hit_rate": jit["hit_rate"],
+            "jit_variants": jit["variants"],
+            "arena_calls": ar["calls"],
+            "arena_tokens": ar["tokens"],
+            "arena_occupancy": ar["occupancy"],
+        }
+    return row
 
 
 def _run_cell_json(spec_json: str) -> Dict:

@@ -196,6 +196,12 @@ def test_cache_stats_keeps_existing_blocks():
     for key in ("batched_calls", "batched_tokens", "serial_tokens",
                 "padded_rows", "batched_max"):
         assert stats["decode"][key] == 0
+    for key in ("calls", "tokens", "masked_rows", "admits", "evicts",
+                "grows", "variants"):
+        assert stats["arena"][key] == 0
+    assert stats["arena"]["occupancy"] is None
+    assert stats["jit"]["variants"] == \
+        {"serial": 0, "batched": 0, "arena": 0}
 
 
 def test_batch_bucket_powers_of_two():

@@ -79,6 +79,62 @@ def test_flash_attention_bf16():
                                np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
 
 
+# ------------------------------------------------------ decode attention
+@pytest.mark.parametrize("B,H,KV,T,hd", [
+    (3, 4, 2, 256, 64), (2, 8, 8, 128, 32), (1, 2, 1, 64, 128),
+])
+def test_decode_attention_sweep(B, H, KV, T, hd):
+    """Single-query arena kernel vs the jnp oracle under ragged per-slot
+    lengths (including a zero-length padded slot when B > 2)."""
+    ks = jax.random.split(jax.random.key(T + H), 4)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, hd), jnp.float32)
+    lengths = jax.random.randint(ks[3], (B,), 1, T + 1)
+    if B > 2:
+        lengths = lengths.at[B - 1].set(0)     # an empty arena slot
+    got = fa_ops.decode_attention(q, k, v, lengths, block_k=64)
+    want = fa_ref.decode_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), lengths).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_bf16():
+    B, H, T, hd = 2, 4, 128, 64
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.bfloat16)
+    lengths = jnp.asarray([7, 128], jnp.int32)
+    got = fa_ops.decode_attention(q, k, v, lengths, block_k=64)
+    want = fa_ref.decode_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), lengths).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_decode_attention_matches_causal_last_row():
+    """Decoding position L-1 with lengths=[L] equals the last row of the
+    causal prefill oracle — the kernel prices exactly the step the arena
+    path runs."""
+    B, H, T, hd = 1, 2, 64, 32
+    ks = jax.random.split(jax.random.key(11), 3)
+    k = jax.random.normal(ks[1], (B, T, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, H, hd), jnp.float32)
+    q_full = jax.random.normal(ks[0], (B, T, H, hd), jnp.float32)
+    full = fa_ref.attention(q_full.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    got = fa_ops.decode_attention(q_full[:, -1:], k, v,
+                                  jnp.asarray([T], jnp.int32), block_k=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1:]),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ---------------------------------------------------------------- ssm scan
 @pytest.mark.parametrize("B,S,H,dk,dv,rwkv", [
     (2, 64, 3, 8, 16, True), (2, 64, 3, 8, 16, False),

@@ -360,7 +360,7 @@ def test_profiler_report(tmp_path):
         assert block["count"] == sc.engine.event_counts[kind]
     assert 0.0 <= rep["tombstone_ratio"] <= 1.0
     caches = rep["stepper_caches"]
-    assert set(caches) == {"plan", "step", "hop", "jit", "decode"}
+    assert set(caches) == {"plan", "step", "hop", "jit", "decode", "arena"}
     assert caches["plan"]["hits"] + caches["plan"]["misses"] > 0
     # nearest-routing mobility replans via the JointPlanner
     assert set(rep["replanner_caches"]) == {"score", "ordered_sets"}
